@@ -1,0 +1,53 @@
+"""Fig. 10 — Similarity-threshold (τ) sweep: index vs delta storage split,
+compression ratio peak, and compression throughput (1 and 2 threads)."""
+
+from __future__ import annotations
+
+import tempfile
+import threading
+import time
+
+from repro.core import StorageEngine
+
+from .common import Csv
+from .workload import model_collection, collection_bytes
+
+
+def run(csv: Csv):
+    collection = model_collection(n_families=2, n_variants=5, n_unrelated=1,
+                                  kind="mlp", sigma=2e-2)
+    orig = collection_bytes(collection)
+    best = (0, None)
+    for tau in (0.01, 0.04, 0.16, 0.64):
+        with tempfile.TemporaryDirectory() as root:
+            eng = StorageEngine(root, tau=tau)
+            t0 = time.perf_counter()
+            for nm, ts in collection:
+                eng.save_model(nm, {}, ts)
+            dt = time.perf_counter() - t0
+            s = eng.storage_bytes()
+            ratio = orig / s["total"]
+            mbs = orig / dt / 1e6
+            csv.add(f"fig10a/tau{tau}", dt * 1e6 / len(collection),
+                    f"index={s['index']} delta={s['pages']} ratio={ratio:.2f}")
+            csv.add(f"fig10b/tau{tau}/threads1", dt * 1e6 / len(collection),
+                    f"MBps={mbs:.1f}")
+            if ratio > best[0]:
+                best = (ratio, tau)
+        # two-thread compression (independent engines — thread-level
+        # parallelism over the model stream, paper §6.4.1 setup).
+        with tempfile.TemporaryDirectory() as root:
+            engs = [StorageEngine(root + f"/t{i}", tau=tau) for i in range(2)]
+            halves = [collection[0::2], collection[1::2]]
+            t0 = time.perf_counter()
+            ths = [threading.Thread(
+                target=lambda e=e, h=h: [e.save_model(nm, {}, ts) for nm, ts in h])
+                for e, h in zip(engs, halves)]
+            for t in ths:
+                t.start()
+            for t in ths:
+                t.join()
+            dt = time.perf_counter() - t0
+            csv.add(f"fig10b/tau{tau}/threads2", dt * 1e6 / len(collection),
+                    f"MBps={orig/dt/1e6:.1f}")
+    csv.add("fig10/peak", 0.0, f"best_ratio={best[0]:.2f} at_tau={best[1]}")

@@ -1,0 +1,45 @@
+"""Fig. 12 — Precision tolerance (p) sweep: accuracy change vs storage.
+
+Real trained MLPs on a synthetic tabular task (Avazu analogue): compress at
+increasing p, measure |Δaccuracy| and compressed bytes. Expect the paper's
+shape: flat near zero until a task-dependent cliff."""
+
+from __future__ import annotations
+
+import tempfile
+
+import numpy as np
+
+from repro.core import StorageEngine
+
+from .common import Csv
+from .workload import (
+    make_tabular_task,
+    mlp_accuracy,
+    mlp_to_tensors,
+    tensors_to_mlp,
+    train_mlp,
+)
+
+
+def run(csv: Csv):
+    x, y = make_tabular_task(seed=0)
+    xtr, ytr, xte, yte = x[:3072], y[:3072], x[3072:], y[3072:]
+    models = [train_mlp(xtr, ytr, seed=s) for s in range(3)]
+    base_accs = [mlp_accuracy(ws, bs, xte, yte) for ws, bs in models]
+    for p in (2.0 ** -24, 1e-5, 1e-3, 1e-2, 5e-2):
+        deltas, bytes_total, orig_total = [], 0, 0
+        with tempfile.TemporaryDirectory() as root:
+            eng = StorageEngine(root, tolerance=p)
+            for i, (ws, bs) in enumerate(models):
+                t = mlp_to_tensors(ws, bs)
+                rep = eng.save_model(f"m{i}", {}, t)
+                orig_total += rep.original_bytes
+                back = eng.load_model(f"m{i}").materialize()
+                ws2, bs2 = tensors_to_mlp(back)
+                acc = mlp_accuracy(ws2, bs2, xte, yte)
+                deltas.append(abs(acc - base_accs[i]))
+            bytes_total = eng.storage_bytes()["total"]
+        csv.add(f"fig12/p{p:.0e}", 0.0,
+                f"acc_change={np.mean(deltas)*100:.3f}% "
+                f"bytes={bytes_total} ratio={orig_total/bytes_total:.2f}")

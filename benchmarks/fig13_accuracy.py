@@ -1,0 +1,66 @@
+"""Fig. 13 — Model performance change across compression algorithms.
+
+Trained models on two tasks; compressors at the default tolerance
+(p = 2^-24) + NeurStore full and flexible-8bit loading. Paper expectation:
+>90% of models show no change for ZFP/ELF/NeurStore-full; flexible loading
+adds a small bounded change."""
+
+from __future__ import annotations
+
+import tempfile
+
+import numpy as np
+
+from repro.baselines.compressors import ALL_COMPRESSORS
+from repro.core import StorageEngine
+
+from .common import Csv
+from .workload import (
+    make_tabular_task,
+    mlp_accuracy,
+    mlp_to_tensors,
+    tensors_to_mlp,
+    train_mlp,
+)
+
+
+def run(csv: Csv):
+    tasks = {
+        "tabular": make_tabular_task(seed=0),
+        "tabular2": make_tabular_task(seed=7, d=32, classes=4),
+    }
+    n_models = 4
+    for task, (x, y) in tasks.items():
+        xtr, ytr, xte, yte = x[:3072], y[:3072], x[3072:], y[3072:]
+        widths = (x.shape[1], 128, int(y.max()) + 1)
+        models = [train_mlp(xtr, ytr, widths=widths, seed=s)
+                  for s in range(n_models)]
+        base = [mlp_accuracy(ws, bs, xte, yte) for ws, bs in models]
+
+        def eval_tensors(ts):
+            ws, bs = tensors_to_mlp(ts)
+            return mlp_accuracy(ws, bs, xte, yte)
+
+        for cname in ("zstd", "zfp", "elf", "ptq8"):
+            comp = ALL_COMPRESSORS[cname]
+            deltas = []
+            for i, (ws, bs) in enumerate(models):
+                ts = mlp_to_tensors(ws, bs)
+                back = {k: comp.decompress(comp.compress(v), v.shape)
+                        for k, v in ts.items()}
+                deltas.append(abs(eval_tensors(back) - base[i]))
+            csv.add(f"fig13/{task}/{cname}", 0.0,
+                    f"mean_change={np.mean(deltas)*100:.4f}% "
+                    f"zero_frac={np.mean(np.array(deltas)==0):.2f}")
+        with tempfile.TemporaryDirectory() as root:
+            eng = StorageEngine(root)
+            for i, (ws, bs) in enumerate(models):
+                eng.save_model(f"{task}{i}", {}, mlp_to_tensors(ws, bs))
+            for mode, bits in (("neurstore_full", None), ("neurstore_flex8", 8)):
+                deltas = []
+                for i in range(n_models):
+                    back = eng.load_model(f"{task}{i}", bits=bits).materialize()
+                    deltas.append(abs(eval_tensors(back) - base[i]))
+                csv.add(f"fig13/{task}/{mode}", 0.0,
+                        f"mean_change={np.mean(deltas)*100:.4f}% "
+                        f"zero_frac={np.mean(np.array(deltas)==0):.2f}")

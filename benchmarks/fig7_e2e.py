@@ -1,0 +1,95 @@
+"""Fig. 7 — End-to-end time breakdown for in-database AI-powered analytics.
+
+Three tasks (tabular MLP ≈ Avazu; sequence transformer ≈ DistilBERT/IMDB;
+encoder transformer ≈ ViT/Beans), three stores (NeurStore, PostgresML-blob,
+ELF*-file). Per task: save N models → load each → run inference; report
+per-stage seconds. NeurStore loading is compression-aware (no full
+decompress before use)."""
+
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from repro.baselines import BlobStore, FileStore
+from repro.core import StorageEngine
+
+from .common import Csv
+from .workload import finetune, mlp_tensors, transformer_tensors
+
+
+def _mlp_infer(tensors, x):
+    # mlp_tensors uses layer{i}/w|b keys.
+    n = len(tensors) // 2
+    h = x
+    for i in range(n):
+        h = h @ tensors[f"layer{i}/w"] + tensors[f"layer{i}/b"]
+        if i < n - 1:
+            h = np.maximum(h, 0)
+    return h
+
+
+def _transformer_infer(tensors, x):
+    # One encoder pass with the stored tensors (numpy; stands in for the
+    # ONNX runtime in the paper — identical across stores by construction).
+    h = x
+    for i in range(4):
+        q = h @ tensors[f"l{i}/wq"]
+        k = h @ tensors[f"l{i}/wk"]
+        v = h @ tensors[f"l{i}/wv"]
+        s = q @ k.transpose(0, 2, 1) / np.sqrt(q.shape[-1])
+        s = np.exp(s - s.max(-1, keepdims=True))
+        s /= s.sum(-1, keepdims=True)
+        h = h + (s @ v) @ tensors[f"l{i}/wo"]
+        ff = np.maximum(h @ tensors[f"l{i}/w1"], 0)
+        h = h + ff @ tensors[f"l{i}/w2"]
+    return h
+
+
+TASKS = {
+    "tabular": dict(maker=lambda seed: mlp_tensors(seed=seed), n_models=6,
+                    infer=_mlp_infer,
+                    x=np.random.default_rng(0).normal(0, 1, (256, 64)).astype(np.float32)),
+    "sequence": dict(maker=lambda seed: transformer_tensors(seed=seed),
+                     n_models=4, infer=_transformer_infer,
+                     x=np.random.default_rng(1).normal(0, 1, (8, 32, 128)).astype(np.float32)),
+    "image": dict(maker=lambda seed: transformer_tensors(d=128, layers=4, seed=seed),
+                  n_models=4, infer=_transformer_infer,
+                  x=np.random.default_rng(2).normal(0, 1, (8, 49, 128)).astype(np.float32)),
+}
+
+
+def run(csv: Csv):
+    for task, spec in TASKS.items():
+        base = spec["maker"](0)
+        models = [(f"{task}/m{i}",
+                   base if i == 0 else finetune(base, seed=i))
+                  for i in range(spec["n_models"])]
+        with tempfile.TemporaryDirectory() as root:
+            stores = {
+                "neurstore": StorageEngine(root + "/ns"),
+                "postgresml": BlobStore(root + "/pg"),
+                "elf*": FileStore(root + "/elf"),
+            }
+            for sname, store in stores.items():
+                t0 = time.perf_counter()
+                for name, tensors in models:
+                    store.save_model(name, {"task": task}, tensors)
+                t_save = time.perf_counter() - t0
+                t0 = time.perf_counter()
+                loaded = [store.load_model(name).materialize()
+                          for name, _ in models]
+                t_load = time.perf_counter() - t0
+                t0 = time.perf_counter()
+                for tensors in loaded:
+                    spec["infer"](tensors, spec["x"])
+                t_infer = time.perf_counter() - t0
+                total = t_save + t_load + t_infer
+                csv.add(f"fig7/{task}/{sname}/save", t_save * 1e6 / len(models),
+                        f"total_s={t_save:.3f}")
+                csv.add(f"fig7/{task}/{sname}/load", t_load * 1e6 / len(models),
+                        f"total_s={t_load:.3f}")
+                csv.add(f"fig7/{task}/{sname}/infer", t_infer * 1e6 / len(models),
+                        f"e2e_s={total:.3f}")

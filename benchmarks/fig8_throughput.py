@@ -1,0 +1,59 @@
+"""Fig. 8 — Save/load throughput under concurrent clients + total storage.
+
+Threads (1..8) issue save then load requests against NeurStore /
+PostgresML-blob / ELF*-file stores; report queries-per-minute and the
+resulting storage bytes (Fig. 8c)."""
+
+from __future__ import annotations
+
+import tempfile
+import threading
+import time
+
+from repro.baselines import BlobStore, FileStore
+from repro.core import StorageEngine
+
+from .common import Csv
+from .workload import model_collection, collection_bytes
+
+
+def _run_clients(n_clients, jobs):
+    """Run callables from ``jobs`` split across n threads; return seconds."""
+    chunks = [jobs[i::n_clients] for i in range(n_clients)]
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=lambda c=c: [j() for j in c])
+               for c in chunks]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return time.perf_counter() - t0
+
+
+def run(csv: Csv):
+    collection = model_collection(n_families=3, n_variants=3, n_unrelated=2)
+    orig = collection_bytes(collection)
+    for n_clients in (1, 4, 8):
+        with tempfile.TemporaryDirectory() as root:
+            stores = {
+                "neurstore": StorageEngine(root + "/ns"),
+                "postgresml": BlobStore(root + "/pg"),
+                "elf*": FileStore(root + "/elf"),
+            }
+            for sname, store in stores.items():
+                saves = [lambda nm=nm, t=t: store.save_model(nm, {}, t)
+                         for nm, t in collection]
+                dt = _run_clients(n_clients, saves)
+                qpm = len(collection) / dt * 60
+                csv.add(f"fig8a/write/{sname}/clients{n_clients}",
+                        dt * 1e6 / len(collection), f"qpm={qpm:.1f}")
+                loads = [lambda nm=nm: store.load_model(nm).materialize()
+                         for nm, _ in collection]
+                dt = _run_clients(n_clients, loads)
+                qpm = len(collection) / dt * 60
+                csv.add(f"fig8b/read/{sname}/clients{n_clients}",
+                        dt * 1e6 / len(collection), f"qpm={qpm:.1f}")
+                if n_clients == 1:
+                    s = store.storage_bytes()
+                    csv.add(f"fig8c/storage/{sname}", 0.0,
+                            f"bytes={s['total']} ratio={orig/s['total']:.2f}")

@@ -1,0 +1,49 @@
+"""Fig. 9 — Compression ratio vs collection size + per-model ratio CDF.
+
+NeurStore vs ZSTD / ZFP-like / ELF on growing model collections. 9(b):
+per-model ratios with base-tensor cost amortized over referencing tensors
+(paper §6.3.2); we report CDF quantiles."""
+
+from __future__ import annotations
+
+import tempfile
+
+import numpy as np
+
+from repro.baselines.compressors import ALL_COMPRESSORS
+from repro.core import StorageEngine
+
+from .common import Csv
+from .workload import model_collection, collection_bytes
+
+
+def run(csv: Csv):
+    for n_fam, tag in ((2, "small"), (4, "medium"), (6, "large")):
+        collection = model_collection(n_families=n_fam, n_variants=4,
+                                      n_unrelated=max(1, n_fam // 2))
+        orig = collection_bytes(collection)
+        # Per-tensor compressors.
+        for cname in ("zstd", "zfp", "elf"):
+            comp = ALL_COMPRESSORS[cname]
+            total = sum(len(comp.compress(t)) for _, ts in collection
+                        for t in ts.values())
+            csv.add(f"fig9a/{tag}/{cname}", 0.0,
+                    f"bytes={total} ratio={orig/total:.2f}")
+        # NeurStore.
+        with tempfile.TemporaryDirectory() as root:
+            eng = StorageEngine(root)
+            for nm, ts in collection:
+                eng.save_model(nm, {}, ts)
+            s = eng.storage_bytes()
+            csv.add(f"fig9a/{tag}/neurstore", 0.0,
+                    f"bytes={s['total']} ratio={orig/s['total']:.2f}")
+            if tag == "large":
+                per_model = []
+                for nm, ts in collection:
+                    raw = sum(t.size * 4 for t in ts.values())
+                    per_model.append(raw / eng.per_model_bytes(nm))
+                q = np.percentile(per_model, [10, 50, 90])
+                frac_14 = float(np.mean(np.asarray(per_model) > 1.4))
+                csv.add("fig9b/cdf/neurstore", 0.0,
+                        f"p10={q[0]:.2f} p50={q[1]:.2f} p90={q[2]:.2f} "
+                        f"frac>1.4x={frac_14:.2f}")

@@ -1,0 +1,35 @@
+"""Benchmark runner — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (repo convention).
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from .common import Csv
+    from . import (fig7_e2e, fig8_throughput, fig9_compression, fig10_tau,
+                   fig11_flexible, fig12_tolerance, fig13_accuracy,
+                   table2_stats, pipeline_bench)
+
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    modules = {
+        "fig7": fig7_e2e, "fig8": fig8_throughput, "fig9": fig9_compression,
+        "fig10": fig10_tau, "fig11": fig11_flexible, "fig12": fig12_tolerance,
+        "fig13": fig13_accuracy, "table2": table2_stats,
+        "pipeline": pipeline_bench,
+    }
+    csv = Csv()
+    print("name,us_per_call,derived")
+    for name, mod in modules.items():
+        if only and name != only:
+            continue
+        mod.run(csv)
+        csv.emit()
+        csv.rows.clear()
+
+
+if __name__ == "__main__":
+    main()

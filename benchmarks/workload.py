@@ -1,0 +1,150 @@
+"""Shared benchmark workloads: synthetic model collections with controlled
+lineage (paper §6.1.1 analogue) and small *trained* models for accuracy
+benchmarks (Figs. 12/13 analogue).
+
+The paper's 800-HuggingFace-model corpus is offline-unavailable; we
+synthesize collections that reproduce its structure: families of fine-tuned
+variants around shared pretrained bases (deltas of controllable magnitude,
+fine-tuning restricted to a subset of layers) plus unrelated models.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+RNG = np.random.default_rng(2025)
+
+
+def mlp_tensors(widths=(64, 256, 256, 8), seed=0, scale=0.05):
+    rng = np.random.default_rng(seed)
+    t = {}
+    for i, (a, b) in enumerate(zip(widths[:-1], widths[1:])):
+        t[f"layer{i}/w"] = rng.normal(0, scale, (a, b)).astype(np.float32)
+        t[f"layer{i}/b"] = np.zeros(b, np.float32)
+    return t
+
+
+def transformer_tensors(d=128, layers=4, ff=512, vocab=512, seed=0):
+    rng = np.random.default_rng(seed)
+    t = {"embed": rng.normal(0, 0.02, (vocab, d)).astype(np.float32)}
+    for i in range(layers):
+        for nm, shape in [("wq", (d, d)), ("wk", (d, d)), ("wv", (d, d)),
+                          ("wo", (d, d)), ("w1", (d, ff)), ("w2", (ff, d)),
+                          ("ln1", (d,)), ("ln2", (d,))]:
+            init = (np.ones(shape) if nm.startswith("ln")
+                    else rng.normal(0, d ** -0.5, shape))
+            t[f"l{i}/{nm}"] = init.astype(np.float32)
+    t["head"] = rng.normal(0, d ** -0.5, (d, vocab)).astype(np.float32)
+    return t
+
+
+def finetune(tensors, seed, sigma=5e-4, layer_fraction=0.5):
+    """Perturb a subset of layers (fine-tuning often touches few layers)."""
+    rng = np.random.default_rng(seed)
+    names = sorted({k.split("/")[0] for k in tensors})
+    touched = set(rng.choice(names, max(1, int(len(names) * layer_fraction)),
+                             replace=False))
+    out = {}
+    for k, v in tensors.items():
+        if k.split("/")[0] in touched:
+            out[k] = (v + rng.normal(0, sigma, v.shape)).astype(np.float32)
+        else:
+            out[k] = v
+    return out
+
+
+def model_collection(n_families=4, n_variants=4, n_unrelated=4,
+                     kind="mixed", sigma=5e-4):
+    """[(name, tensors)] — families of fine-tunes + unrelated models."""
+    out = []
+    makers = {"mlp": mlp_tensors, "transformer": transformer_tensors}
+    kinds = (["mlp", "transformer"] if kind == "mixed" else [kind])
+    for f in range(n_families):
+        mk = makers[kinds[f % len(kinds)]]
+        base = mk(seed=100 + f)
+        out.append((f"fam{f}/base", base))
+        for v in range(n_variants):
+            out.append((f"fam{f}/ft{v}",
+                        finetune(base, seed=1000 + f * 50 + v, sigma=sigma)))
+    for u in range(n_unrelated):
+        mk = makers[kinds[u % len(kinds)]]
+        out.append((f"solo{u}", mk(seed=9000 + u)))
+    return out
+
+
+def collection_bytes(collection) -> int:
+    return sum(sum(v.size * 4 for v in t.values()) for _, t in collection)
+
+
+# ------------------------------------------------------------ trained models
+def make_tabular_task(seed=0, n=4096, d=64, classes=8):
+    """Avazu-like synthetic CTR/classification task with a planted MLP."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (n, d)).astype(np.float32)
+    w_true = rng.normal(0, 1, (d, classes))
+    y = (x @ w_true + 0.5 * rng.normal(0, 1, (n, classes))).argmax(-1)
+    return x, y.astype(np.int32)
+
+
+def train_mlp(x, y, widths=(64, 128, 8), steps=300, seed=0, lr=0.05):
+    """Tiny numpy MLP trained with softmax CE — a *real* trained model for
+    the accuracy-vs-tolerance benchmarks."""
+    rng = np.random.default_rng(seed)
+    ws = [rng.normal(0, a ** -0.5, (a, b)).astype(np.float32)
+          for a, b in zip(widths[:-1], widths[1:])]
+    bs = [np.zeros(b, np.float32) for b in widths[1:]]
+
+    def fwd(params, xb):
+        ws_, bs_ = params
+        h = xb
+        acts = [h]
+        for i, (w, b) in enumerate(zip(ws_, bs_)):
+            h = h @ w + b
+            if i < len(ws_) - 1:
+                h = np.maximum(h, 0)
+            acts.append(h)
+        return h, acts
+
+    n = x.shape[0]
+    for step in range(steps):
+        idx = rng.integers(0, n, 256)
+        xb, yb = x[idx], y[idx]
+        logits, acts = fwd((ws, bs), xb)
+        logits = logits - logits.max(-1, keepdims=True)
+        p = np.exp(logits)
+        p /= p.sum(-1, keepdims=True)
+        g = p
+        g[np.arange(len(yb)), yb] -= 1
+        g /= len(yb)
+        # backprop
+        for i in reversed(range(len(ws))):
+            a_in = acts[i]
+            gw = a_in.T @ g
+            gb = g.sum(0)
+            if i > 0:
+                g = (g @ ws[i].T) * (acts[i] > 0)
+            ws[i] -= lr * gw
+            bs[i] -= lr * gb
+    return ws, bs
+
+
+def mlp_accuracy(ws, bs, x, y) -> float:
+    h = x
+    for i, (w, b) in enumerate(zip(ws, bs)):
+        h = h @ w + b
+        if i < len(ws) - 1:
+            h = np.maximum(h, 0)
+    return float((h.argmax(-1) == y).mean())
+
+
+def mlp_to_tensors(ws, bs):
+    t = {}
+    for i, (w, b) in enumerate(zip(ws, bs)):
+        t[f"l{i}/w"] = w
+        t[f"l{i}/b"] = b
+    return t
+
+
+def tensors_to_mlp(t):
+    n = len(t) // 2
+    return ([t[f"l{i}/w"] for i in range(n)], [t[f"l{i}/b"] for i in range(n)])

@@ -1,0 +1,6 @@
+"""Baselines: compression algorithms + model stores the paper compares."""
+
+from .compressors import ALL_COMPRESSORS
+from .stores import BlobStore, FileStore
+
+__all__ = ["ALL_COMPRESSORS", "BlobStore", "FileStore"]

@@ -1,0 +1,5 @@
+"""Fault tolerance: NeurStore-backed delta-compressed checkpointing."""
+
+from .manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

@@ -1,0 +1,32 @@
+"""deepseek-67b [dense] — llama-arch GQA decoder.
+
+95L d_model=8192 64H (GQA kv=8) d_ff=22016 vocab=102400
+[arXiv:2401.02954; hf].
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-67b",
+    family="dense",
+    n_layers=95,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=22016,
+    vocab_size=102_400,
+)
+
+SMOKE = ModelConfig(
+    name="deepseek-smoke",
+    family="dense",
+    n_layers=3,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    vocab_size=256,
+    param_dtype="float32",
+    compute_dtype="float32",
+    attn_chunk=32,
+)

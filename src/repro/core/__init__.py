@@ -1,0 +1,33 @@
+"""NeurStore core: tensor-based storage engine, delta quantization, loader."""
+
+from .engine import DEFAULT_TAU, DEFAULT_TOLERANCE, SaveReport, StorageEngine
+from .hnsw import HNSWIndex, quantized_l2_batch
+from .loader import LoadedModel, PipelineLoader, reconstruct_jnp
+from .quantize import (
+    QuantMeta,
+    delta_nbit,
+    dequantize_delta,
+    dequantize_linear,
+    extract_msb,
+    quantize_delta,
+    quantize_linear,
+)
+
+__all__ = [
+    "DEFAULT_TAU",
+    "DEFAULT_TOLERANCE",
+    "HNSWIndex",
+    "LoadedModel",
+    "PipelineLoader",
+    "QuantMeta",
+    "SaveReport",
+    "StorageEngine",
+    "delta_nbit",
+    "dequantize_delta",
+    "dequantize_linear",
+    "extract_msb",
+    "quantize_delta",
+    "quantize_linear",
+    "quantized_l2_batch",
+    "reconstruct_jnp",
+]

@@ -1,0 +1,74 @@
+"""Bit-packing for n-bit quantized payloads (paper §5: "bit-packed payload").
+
+Values are packed MSB-first so that *flexible loading* (paper §4.3.1) can
+read a byte-aligned prefix of each value's bits: with ``pack_bits_planar`` the
+payload is stored as ``nbit`` bit-planes ordered from most significant to
+least significant, so reading the first ``b`` planes yields exactly
+``extract_msb(q, b)``. This mirrors NeurStore's ability to fetch only the
+most-significant bits of each delta tensor from disk.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["pack_bits", "unpack_bits", "pack_bits_planar", "unpack_bits_planar", "planar_plane_bytes"]
+
+
+def pack_bits(values: np.ndarray, nbit: int) -> bytes:
+    """Pack unsigned ints (< 2^nbit) into a dense MSB-first bitstream."""
+    if nbit == 0 or values.size == 0:
+        return b""
+    v = np.ascontiguousarray(values.ravel(), dtype=np.uint64)
+    shifts = np.arange(nbit - 1, -1, -1, dtype=np.uint64)
+    bits = ((v[:, None] >> shifts[None, :]) & 1).astype(np.uint8)
+    return np.packbits(bits.ravel()).tobytes()
+
+
+def unpack_bits(data: bytes, nbit: int, count: int) -> np.ndarray:
+    """Inverse of :func:`pack_bits`; returns int64 values of length ``count``."""
+    if nbit == 0 or count == 0:
+        return np.zeros(count, dtype=np.int64)
+    bits = np.unpackbits(np.frombuffer(data, dtype=np.uint8), count=count * nbit)
+    bits = bits.reshape(count, nbit).astype(np.int64)
+    weights = (1 << np.arange(nbit - 1, -1, -1, dtype=np.int64))
+    return bits @ weights
+
+
+def planar_plane_bytes(count: int) -> int:
+    """Bytes used by one bit-plane for ``count`` values."""
+    return (count + 7) // 8
+
+
+def pack_bits_planar(values: np.ndarray, nbit: int) -> bytes:
+    """Pack as ``nbit`` bit-planes, most-significant plane first.
+
+    Plane ``k`` (0-based) holds bit ``nbit-1-k`` of every value. A reader
+    wanting only the top ``b`` bits reads ``b * planar_plane_bytes(n)`` bytes.
+    """
+    if nbit == 0 or values.size == 0:
+        return b""
+    v = np.ascontiguousarray(values.ravel(), dtype=np.uint64)
+    out = bytearray()
+    for k in range(nbit - 1, -1, -1):
+        plane = ((v >> np.uint64(k)) & 1).astype(np.uint8)
+        out += np.packbits(plane).tobytes()
+    return bytes(out)
+
+
+def unpack_bits_planar(data: bytes, nbit: int, count: int, b: int | None = None) -> np.ndarray:
+    """Unpack the top ``b`` (default all) bit-planes into int64 values.
+
+    Returns values of width ``min(b, nbit)`` — i.e. already MSB-truncated,
+    matching :func:`repro.core.quantize.extract_msb` on the full values.
+    """
+    if nbit == 0 or count == 0:
+        return np.zeros(count, dtype=np.int64)
+    b = nbit if b is None else min(b, nbit)
+    plane_nbytes = planar_plane_bytes(count)
+    buf = np.frombuffer(data, dtype=np.uint8)
+    acc = np.zeros(count, dtype=np.int64)
+    for k in range(b):
+        plane = np.unpackbits(buf[k * plane_nbytes:(k + 1) * plane_nbytes], count=count)
+        acc = (acc << 1) | plane.astype(np.int64)
+    return acc

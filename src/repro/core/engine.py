@@ -1,0 +1,302 @@
+"""NeurStore storage engine (paper §3, §4.1, §4.2 / Algorithm 1).
+
+Components mirroring Figure 3:
+
+* **Index storage** — a pool of HNSW indexes, one per flattened tensor
+  length, holding 8-bit quantized base tensors; fronted by a byte-budgeted
+  **index cache** with LRU eviction (evicted indexes are serialized to disk
+  and reloaded on demand — paper §4.1 "Index Cache", §5 "32 GB default").
+* **Delta tensor storage** — read-only tensor pages, one per model, records
+  ordered by the model architecture for locality (paper §4.1).
+* **Metadata storage** — model id/name → architecture + page path, the
+  library analogue of the paper's relational model table.
+
+``save_model`` is Algorithm 1 verbatim: decouple → per-tensor ANN search →
+delta encode → SHOULDCOMPRESS(δ) range-vs-τ check → (maybe) new vertex →
+adaptive n-bit quantization → page write.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+import time
+from collections import OrderedDict
+
+import numpy as np
+
+from .hnsw import HNSWIndex
+from .pages import TensorPage, TensorRecord, read_page_header, write_page
+from .quantize import (
+    dequantize_delta,
+    quantize_delta,
+)
+
+__all__ = ["StorageEngine", "SaveReport", "DEFAULT_TOLERANCE", "DEFAULT_TAU"]
+
+# Paper §4.2 Discussion: default p = 2^-24 (below f32 machine epsilon);
+# §6.1.3: default similarity threshold tau = 0.16.
+DEFAULT_TOLERANCE = 2.0 ** -24
+DEFAULT_TAU = 0.16
+
+
+@dataclasses.dataclass
+class SaveReport:
+    """Statistics from one ``save_model`` call (feeds the benchmarks)."""
+
+    model_id: int
+    name: str
+    original_bytes: int
+    page_bytes: int
+    n_tensors: int
+    n_new_bases: int
+    n_deltas: int
+    nbits: list[int]
+    seconds: float
+
+    @property
+    def mean_nbit(self) -> float:
+        return float(np.mean(self.nbits)) if self.nbits else 0.0
+
+
+class _IndexCache:
+    """LRU cache of deserialized HNSW indexes, bounded by bytes (paper §4.1)."""
+
+    def __init__(self, root: str, budget_bytes: int):
+        self.root = root
+        self.budget = budget_bytes
+        self._live: OrderedDict[int, HNSWIndex] = OrderedDict()
+        self._lock = threading.RLock()
+        self.hits = 0
+        self.misses = 0
+
+    def _path(self, dim: int) -> str:
+        return os.path.join(self.root, f"hnsw_{dim}.idx")
+
+    def get(self, dim: int, create: bool = False) -> HNSWIndex | None:
+        with self._lock:
+            if dim in self._live:
+                self._live.move_to_end(dim)
+                self.hits += 1
+                return self._live[dim]
+            path = self._path(dim)
+            if os.path.exists(path):
+                self.misses += 1
+                with open(path, "rb") as f:
+                    idx = HNSWIndex.from_bytes(f.read())
+            elif create:
+                idx = HNSWIndex(dim)
+            else:
+                return None
+            self._live[dim] = idx
+            self._evict()
+            return idx
+
+    def _evict(self) -> None:
+        while len(self._live) > 1 and self.resident_bytes() > self.budget:
+            dim, idx = self._live.popitem(last=False)
+            with open(self._path(dim), "wb") as f:
+                f.write(idx.to_bytes())
+
+    def resident_bytes(self) -> int:
+        return sum(i.nbytes for i in self._live.values())
+
+    def flush(self) -> None:
+        with self._lock:
+            for dim, idx in self._live.items():
+                with open(self._path(dim), "wb") as f:
+                    f.write(idx.to_bytes())
+
+    def dims(self) -> list[int]:
+        with self._lock:
+            on_disk = {
+                int(f[len("hnsw_"):-len(".idx")])
+                for f in os.listdir(self.root)
+                if f.startswith("hnsw_") and f.endswith(".idx")
+            }
+            return sorted(on_disk | set(self._live))
+
+
+class StorageEngine:
+    """The NeurStore tensor-based storage engine."""
+
+    def __init__(
+        self,
+        root: str,
+        tolerance: float = DEFAULT_TOLERANCE,
+        tau: float = DEFAULT_TAU,
+        cache_bytes: int = 32 << 30,
+        ef_search: int = 32,
+    ):
+        self.root = root
+        os.makedirs(os.path.join(root, "pages"), exist_ok=True)
+        os.makedirs(os.path.join(root, "index"), exist_ok=True)
+        self.tolerance = tolerance
+        self.tau = tau
+        self.ef_search = ef_search
+        self.index_cache = _IndexCache(os.path.join(root, "index"), cache_bytes)
+        self._meta_path = os.path.join(root, "meta.json")
+        self._meta: dict = {"models": {}, "next_id": 0, "vertex_refs": {}}
+        if os.path.exists(self._meta_path):
+            with open(self._meta_path) as f:
+                self._meta = json.load(f)
+        self._lock = threading.RLock()
+
+    # --------------------------------------------------------------- helpers
+    def _persist_meta(self) -> None:
+        tmp = self._meta_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self._meta, f)
+        os.replace(tmp, self._meta_path)  # atomic commit
+
+    def _page_path(self, model_id: int) -> str:
+        return os.path.join(self.root, "pages", f"model_{model_id}.page")
+
+    def _ref_vertex(self, dim: int, vid: int, delta: int = 1) -> None:
+        key = f"{dim}:{vid}"
+        refs = self._meta["vertex_refs"]
+        refs[key] = refs.get(key, 0) + delta
+
+    # ----------------------------------------------------------- save (Alg 1)
+    def save_model(
+        self,
+        name: str,
+        architecture: dict,
+        tensors: "OrderedDict[str, np.ndarray] | dict[str, np.ndarray]",
+        tolerance: float | None = None,
+        tau: float | None = None,
+    ) -> SaveReport:
+        """Algorithm 1: delta-quantize ``tensors`` and persist one page.
+
+        ``tensors`` is name → float array, iterated in architecture order so
+        records land in page order matching the computation graph (paper
+        §4.1 "delta tensors are organized in the order defined by the model
+        architecture").
+        """
+        t0 = time.perf_counter()
+        p = self.tolerance if tolerance is None else tolerance
+        tau_ = self.tau if tau is None else tau
+        records: list[TensorRecord] = []
+        n_new = 0
+        nbits: list[int] = []
+        original_bytes = 0
+        with self._lock:
+            for tname, tensor in tensors.items():
+                arr = np.asarray(tensor, dtype=np.float64)
+                original_bytes += arr.size * 4  # stored models are float32
+                flat = arr.ravel()
+                dim = flat.size
+                index = self.index_cache.get(dim, create=True)
+                # (2) ANN search for the closest base tensor.
+                hit = index.search(flat, k=1, ef=self.ef_search)
+                vid = hit[0][1] if hit else -1
+                if vid >= 0:
+                    base = index.dequantize_vertex(vid)
+                    delta = flat - base
+                else:
+                    delta = None
+                # (3) SHOULDCOMPRESS: range-of-delta vs tau (paper §4.2).
+                if delta is None or float(delta.max() - delta.min()) > tau_:
+                    # New vertex: quantize t to 8-bit, insert, recompute delta
+                    # against its own de-quantized representation.
+                    vid = index.insert(flat)
+                    base = index.dequantize_vertex(vid)
+                    delta = flat - base
+                    n_new += 1
+                # (4) Adaptive n-bit quantization of the delta (Eq. 2/3).
+                qd, meta = quantize_delta(delta, p)
+                nbits.append(meta.nbit)
+                records.append(
+                    TensorRecord(
+                        name=tname,
+                        shape=tuple(int(s) for s in arr.shape),
+                        dim_key=dim,
+                        vertex_id=vid,
+                        meta=meta,
+                        qdelta=qd,
+                    )
+                )
+                self._ref_vertex(dim, vid)
+            page = write_page(records)
+            model_id = self._meta["next_id"]
+            self._meta["next_id"] = model_id + 1
+            with open(self._page_path(model_id), "wb") as f:
+                f.write(page)
+            self._meta["models"][name] = {
+                "id": model_id,
+                "architecture": architecture,
+                "page": os.path.basename(self._page_path(model_id)),
+                "n_tensors": len(records),
+                "original_bytes": original_bytes,
+            }
+            self._persist_meta()
+            self.index_cache.flush()
+        return SaveReport(
+            model_id=model_id,
+            name=name,
+            original_bytes=original_bytes,
+            page_bytes=len(page),
+            n_tensors=len(records),
+            n_new_bases=n_new,
+            n_deltas=len(records) - n_new,
+            nbits=nbits,
+            seconds=time.perf_counter() - t0,
+        )
+
+    # ------------------------------------------------------------------ load
+    def open_page(self, name: str) -> tuple[TensorPage, dict]:
+        info = self._meta["models"][name]
+        with open(os.path.join(self.root, "pages", info["page"]), "rb") as f:
+            page = read_page_header(f.read())
+        return page, info
+
+    def load_model(self, name: str, bits: int | None = None):
+        """Compression-aware load — see :mod:`repro.core.loader`."""
+        from .loader import LoadedModel
+
+        page, info = self.open_page(name)
+        return LoadedModel(engine=self, page=page, info=info, bits=bits)
+
+    # ------------------------------------------------------------ accounting
+    def list_models(self) -> list[str]:
+        return list(self._meta["models"].keys())
+
+    def storage_bytes(self) -> dict:
+        """Total storage split: pages vs index (paper Fig. 10a breakdown)."""
+        pages = sum(
+            os.path.getsize(os.path.join(self.root, "pages", m["page"]))
+            for m in self._meta["models"].values()
+        )
+        self.index_cache.flush()
+        index = sum(
+            os.path.getsize(os.path.join(self.root, "index", f))
+            for f in os.listdir(os.path.join(self.root, "index"))
+        )
+        return {"pages": pages, "index": index, "total": pages + index}
+
+    def per_model_bytes(self, name: str) -> float:
+        """Page bytes + amortized share of referenced base-tensor storage.
+
+        Paper §6.3.2: "evenly distribute the storage cost of each base tensor
+        in the index across all tensors that reference it".
+        """
+        page, info = self.open_page(name)
+        total = float(os.path.getsize(os.path.join(self.root, "pages", info["page"])))
+        refs = self._meta["vertex_refs"]
+        from .pages import read_record
+
+        for i in range(page.n_records):
+            rec = read_record(page, i, with_payload=False)
+            share = refs.get(f"{rec.dim_key}:{rec.vertex_id}", 1)
+            # 8-bit base codes + graph overhead approximated by codes size.
+            total += rec.numel / max(share, 1)
+        return total
+
+    def reconstruct_tensor(self, rec: TensorRecord) -> np.ndarray:
+        """Full reconstruction: de-quantized base + de-quantized delta."""
+        index = self.index_cache.get(rec.dim_key)
+        base = index.dequantize_vertex(rec.vertex_id)
+        delta = dequantize_delta(rec.qdelta, rec.meta)
+        return (base + delta).reshape(rec.shape).astype(np.float32)

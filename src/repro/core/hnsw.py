@@ -1,0 +1,239 @@
+"""HNSW tensor index (paper §2.3, §4.1).
+
+Faithful multi-layer HNSW (Malkov & Yashunin) specialised the way NeurStore
+uses it:
+
+* each vertex stores an **8-bit quantized base tensor** plus its scale /
+  zero-point (paper §4.1 "to reduce the index size, each base tensor is
+  quantized to 8-bit ... prior to insertion");
+* distance between a float32 query and a vertex de-quantizes the vertex on
+  the fly — the paper's ``QuantizedL2Space`` (AVX2). Here the hot loop is the
+  vectorized :func:`quantized_l2_batch`, mirrored 1:1 by the Pallas TPU
+  kernel in ``repro.kernels.quantized_l2``;
+* one index per flattened tensor length — the engine keeps a pool keyed by
+  ``dim`` (paper §4.2 flattens tensors so (10,10) and (5,20) share an index).
+
+Graph traversal is host-side control flow (as in the paper's CPU extension);
+only the distance computation is a dense batched op.
+"""
+
+from __future__ import annotations
+
+import math
+import pickle
+
+import numpy as np
+
+from .quantize import QuantMeta, quantize_linear
+
+__all__ = ["HNSWIndex", "quantized_l2_batch"]
+
+
+def quantized_l2_batch(
+    query: np.ndarray,
+    codes: np.ndarray,
+    scales: np.ndarray,
+    zero_points: np.ndarray,
+    mids: np.ndarray,
+) -> np.ndarray:
+    """Squared L2 between one f32 query (D,) and N quantized rows (N, D).
+
+    Row i de-quantizes as ``(codes[i] - zp[i]) * scale[i]`` (or the constant
+    ``mids[i]`` when ``scale[i] == 0``). This is the oracle the Pallas kernel
+    ``repro/kernels/quantized_l2.py`` reproduces on TPU.
+    """
+    deq = (codes.astype(np.float64) - zero_points[:, None]) * scales[:, None]
+    const_rows = scales == 0.0
+    if const_rows.any():
+        deq[const_rows] = mids[const_rows, None]
+    diff = deq - query[None, :].astype(np.float64)
+    return np.einsum("nd,nd->n", diff, diff)
+
+
+class HNSWIndex:
+    """Hierarchical navigable small world graph over quantized base tensors."""
+
+    def __init__(self, dim: int, m: int = 16, ef_construction: int = 64, seed: int = 0):
+        self.dim = dim
+        self.m = m
+        self.m0 = 2 * m
+        self.ef_construction = ef_construction
+        self.ml = 1.0 / math.log(m)
+        self._rng = np.random.default_rng(seed)
+        # Vertex payloads: quantized codes + per-vertex quant meta arrays.
+        self._codes = np.zeros((0, dim), dtype=np.uint8)
+        self._scales = np.zeros((0,), dtype=np.float64)
+        self._zps = np.zeros((0,), dtype=np.int32)
+        self._mids = np.zeros((0,), dtype=np.float64)
+        self._levels: list[int] = []
+        # neighbors[layer][node] -> list[int]
+        self._neighbors: list[dict[int, list[int]]] = []
+        self._entry: int | None = None
+        self._max_level = -1
+
+    # ------------------------------------------------------------------ size
+    def __len__(self) -> int:
+        return len(self._levels)
+
+    @property
+    def nbytes(self) -> int:
+        """Approximate resident size (codes dominate; paper stores 8-bit)."""
+        edge_bytes = sum(
+            8 * sum(len(v) for v in layer.values()) for layer in self._neighbors
+        )
+        return self._codes.nbytes + self._scales.nbytes + self._zps.nbytes + edge_bytes
+
+    # ------------------------------------------------------------ vertex I/O
+    def vertex_codes(self, vid: int) -> tuple[np.ndarray, QuantMeta]:
+        meta = QuantMeta(
+            scale=float(self._scales[vid]),
+            zero_point=int(self._zps[vid]),
+            nbit=8,
+            mid=float(self._mids[vid]),
+        )
+        return self._codes[vid], meta
+
+    def dequantize_vertex(self, vid: int) -> np.ndarray:
+        codes, meta = self.vertex_codes(vid)
+        if meta.scale == 0.0:
+            return np.full(self.dim, meta.mid, dtype=np.float64)
+        return (codes.astype(np.float64) - meta.zero_point) * meta.scale
+
+    # ------------------------------------------------------------- distances
+    def _distances(self, query: np.ndarray, ids: list[int]) -> np.ndarray:
+        idx = np.asarray(ids, dtype=np.int64)
+        return quantized_l2_batch(
+            query, self._codes[idx], self._scales[idx], self._zps[idx], self._mids[idx]
+        )
+
+    # ---------------------------------------------------------------- search
+    def _search_layer(
+        self, query: np.ndarray, entry: list[int], ef: int, layer: int
+    ) -> list[tuple[float, int]]:
+        """Best-first search on one layer; returns ef closest (dist, id)."""
+        import heapq
+
+        visited = set(entry)
+        dists = self._distances(query, entry)
+        cand: list[tuple[float, int]] = [(d, v) for d, v in zip(dists, entry)]
+        heapq.heapify(cand)
+        best: list[tuple[float, int]] = [(-d, v) for d, v in zip(dists, entry)]
+        heapq.heapify(best)
+        while len(best) > ef:
+            heapq.heappop(best)
+        adj = self._neighbors[layer]
+        while cand:
+            d, v = heapq.heappop(cand)
+            if best and d > -best[0][0]:
+                break
+            fresh = [u for u in adj.get(v, ()) if u not in visited]
+            if not fresh:
+                continue
+            visited.update(fresh)
+            fd = self._distances(query, fresh)
+            bound = -best[0][0]
+            for du, u in zip(fd, fresh):
+                if len(best) < ef or du < bound:
+                    heapq.heappush(cand, (du, u))
+                    heapq.heappush(best, (-du, u))
+                    if len(best) > ef:
+                        heapq.heappop(best)
+                    bound = -best[0][0]
+        return sorted((-nd, v) for nd, v in best)
+
+    def search(self, query: np.ndarray, k: int = 1, ef: int | None = None) -> list[tuple[float, int]]:
+        """Approximate k-NN of a float query; returns [(sq_dist, vertex_id)]."""
+        if self._entry is None:
+            return []
+        ef = max(ef or self.ef_construction, k)
+        q = np.asarray(query, dtype=np.float64).ravel()
+        entry = [self._entry]
+        for layer in range(self._max_level, 0, -1):
+            entry = [self._search_layer(q, entry, 1, layer)[0][1]]
+        return self._search_layer(q, entry, ef, 0)[:k]
+
+    # ---------------------------------------------------------------- insert
+    def _select_neighbors(self, cands: list[tuple[float, int]], m: int) -> list[int]:
+        return [v for _, v in sorted(cands)[:m]]
+
+    def insert(self, tensor: np.ndarray) -> int:
+        """Quantize ``tensor`` to 8 bits and insert as a new vertex.
+
+        Returns the vertex id. The stored representation is the quantized
+        code; callers needing the de-quantized base use
+        :meth:`dequantize_vertex`.
+        """
+        q = np.asarray(tensor, dtype=np.float64).ravel()
+        assert q.size == self.dim, (q.size, self.dim)
+        codes, meta = quantize_linear(q, nbit=8)
+        vid = len(self._levels)
+        self._codes = np.concatenate([self._codes, codes.astype(np.uint8)[None, :]])
+        self._scales = np.append(self._scales, meta.scale)
+        self._zps = np.append(self._zps, meta.zero_point)
+        self._mids = np.append(self._mids, meta.mid)
+        level = int(-math.log(max(self._rng.random(), 1e-12)) * self.ml)
+        self._levels.append(level)
+        while len(self._neighbors) <= level:
+            self._neighbors.append({})
+        for layer in range(level + 1):
+            self._neighbors[layer].setdefault(vid, [])
+
+        if self._entry is None:
+            self._entry = vid
+            self._max_level = level
+            return vid
+
+        entry = [self._entry]
+        for layer in range(self._max_level, level, -1):
+            entry = [self._search_layer(q, entry, 1, layer)[0][1]]
+        for layer in range(min(level, self._max_level), -1, -1):
+            cands = self._search_layer(q, entry, self.ef_construction, layer)
+            m = self.m0 if layer == 0 else self.m
+            nbrs = self._select_neighbors(cands, m)
+            adj = self._neighbors[layer]
+            adj[vid] = list(nbrs)
+            for u in nbrs:
+                lst = adj.setdefault(u, [])
+                lst.append(vid)
+                if len(lst) > m:
+                    # Shrink: keep the m closest to u.
+                    base_u = self.dequantize_vertex(u)
+                    du = self._distances(base_u, lst)
+                    order = np.argsort(du)[:m]
+                    adj[u] = [lst[i] for i in order]
+            entry = [v for _, v in cands]
+        if level > self._max_level:
+            self._max_level = level
+            self._entry = vid
+        return vid
+
+    # ------------------------------------------------------------- serialize
+    def to_bytes(self) -> bytes:
+        state = {
+            "dim": self.dim,
+            "m": self.m,
+            "ef_construction": self.ef_construction,
+            "codes": self._codes,
+            "scales": self._scales,
+            "zps": self._zps,
+            "mids": self._mids,
+            "levels": self._levels,
+            "neighbors": self._neighbors,
+            "entry": self._entry,
+            "max_level": self._max_level,
+        }
+        return pickle.dumps(state, protocol=pickle.HIGHEST_PROTOCOL)
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "HNSWIndex":
+        state = pickle.loads(data)
+        idx = cls(state["dim"], state["m"], state["ef_construction"])
+        idx._codes = state["codes"]
+        idx._scales = state["scales"]
+        idx._zps = state["zps"]
+        idx._mids = state["mids"]
+        idx._levels = state["levels"]
+        idx._neighbors = state["neighbors"]
+        idx._entry = state["entry"]
+        idx._max_level = state["max_level"]
+        return idx

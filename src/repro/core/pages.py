@@ -1,0 +1,157 @@
+"""Tensor pages — NeurStore's on-disk unit for compressed tensors (paper §5).
+
+Layout (paper §5, kept byte-faithful in spirit):
+
+* a tensor page holds the complete set of compressed tensors of one model;
+* a fixed-length header records offsets and lengths of all delta tensors;
+* each record keeps metadata — name, shape, reference to its base tensor
+  (index dim + HNSW vertex id), quantization parameters (scale, zero point),
+  single-element bit width — followed by a bit-packed payload.
+
+Payloads are stored **planar MSB-first** (see ``bitpack.pack_bits_planar``)
+so flexible loading can read only the top ``b`` bit-planes of each tensor —
+the storage-level realization of paper §4.3.1.
+
+Pages are read-only once written (paper §5) and addressed by ``bytes`` /
+``memoryview`` slicing, the library analogue of the paper's ``mmap``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+
+import numpy as np
+
+from .bitpack import pack_bits_planar, planar_plane_bytes, unpack_bits_planar
+from .quantize import QuantMeta
+
+__all__ = ["TensorRecord", "TensorPage", "write_page", "read_page_header", "read_record", "read_record_partial"]
+
+_MAGIC = b"NSPG"
+_VERSION = 2
+_HDR = struct.Struct("<4sHI")           # magic, version, n_records
+_OFFSET = struct.Struct("<QQ")          # offset, length per record
+_REC_FIXED = struct.Struct("<HBqQqdqBd")  # name_len, ndim, vertex, dim_key, numel, scale, zp, nbit, mid
+
+
+@dataclasses.dataclass
+class TensorRecord:
+    """One compressed tensor: quantized delta + reference to its base."""
+
+    name: str
+    shape: tuple[int, ...]
+    dim_key: int          # flattened length == which HNSW index pool entry
+    vertex_id: int        # base tensor vertex in that index
+    meta: QuantMeta       # delta quantization parameters
+    qdelta: np.ndarray | None = None   # int64 codes (None until payload read)
+    payload: bytes = b""
+
+    @property
+    def numel(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    @property
+    def payload_nbytes(self) -> int:
+        return self.meta.nbit * planar_plane_bytes(self.numel)
+
+
+def _encode_record(rec: TensorRecord) -> bytes:
+    name_b = rec.name.encode("utf-8")
+    payload = rec.payload or (
+        pack_bits_planar(rec.qdelta, rec.meta.nbit) if rec.qdelta is not None else b""
+    )
+    fixed = _REC_FIXED.pack(
+        len(name_b), len(rec.shape), rec.vertex_id, rec.dim_key, rec.numel,
+        rec.meta.scale, rec.meta.zero_point, rec.meta.nbit, rec.meta.mid,
+    )
+    dims = struct.pack(f"<{len(rec.shape)}I", *rec.shape)
+    return fixed + name_b + dims + payload
+
+
+def _decode_record(buf: memoryview, with_payload: bool = True, bits: int | None = None) -> TensorRecord:
+    (name_len, ndim, vertex, dim_key, numel, scale, zp, nbit, mid) = _REC_FIXED.unpack_from(buf, 0)
+    off = _REC_FIXED.size
+    name = bytes(buf[off:off + name_len]).decode("utf-8")
+    off += name_len
+    shape = struct.unpack_from(f"<{ndim}I", buf, off)
+    off += 4 * ndim
+    meta = QuantMeta(scale=scale, zero_point=zp, nbit=nbit, mid=mid)
+    rec = TensorRecord(name=name, shape=tuple(shape), dim_key=dim_key,
+                       vertex_id=vertex, meta=meta)
+    if with_payload and nbit > 0:
+        plane = planar_plane_bytes(numel)
+        b = nbit if bits is None else min(bits, nbit)
+        payload = bytes(buf[off:off + b * plane])
+        q = unpack_bits_planar(payload, nbit, numel, b=b)
+        if b < nbit:
+            # MSB-truncated read: widen scale, shift zero point (Alg. 2 l.6-8).
+            shift = nbit - b
+            meta = QuantMeta(scale=scale * (1 << shift), zero_point=zp >> shift,
+                             nbit=b, mid=mid)
+            rec.meta = meta
+        rec.qdelta = q
+    elif with_payload:
+        rec.qdelta = np.zeros(numel, dtype=np.int64)
+    return rec
+
+
+@dataclasses.dataclass
+class TensorPage:
+    """A parsed page: header offsets plus raw buffer for lazy record reads."""
+
+    buf: bytes
+    offsets: list[tuple[int, int]]
+
+    @property
+    def n_records(self) -> int:
+        return len(self.offsets)
+
+
+def write_page(records: list[TensorRecord]) -> bytes:
+    """Serialize records into one read-only tensor page."""
+    blobs = [_encode_record(r) for r in records]
+    header = _HDR.pack(_MAGIC, _VERSION, len(blobs))
+    table_size = _OFFSET.size * len(blobs)
+    base = len(header) + table_size
+    out = bytearray(header)
+    off = base
+    for b in blobs:
+        out += _OFFSET.pack(off, len(b))
+        off += len(b)
+    for b in blobs:
+        out += b
+    return bytes(out)
+
+
+def read_page_header(buf: bytes) -> TensorPage:
+    magic, version, n = _HDR.unpack_from(buf, 0)
+    if magic != _MAGIC:
+        raise ValueError("not a NeurStore tensor page")
+    if version != _VERSION:
+        raise ValueError(f"unsupported tensor page version {version}")
+    offsets = []
+    pos = _HDR.size
+    for _ in range(n):
+        o, l = _OFFSET.unpack_from(buf, pos)
+        offsets.append((o, l))
+        pos += _OFFSET.size
+    return TensorPage(buf=buf, offsets=offsets)
+
+
+def read_record(page: TensorPage, i: int, with_payload: bool = True) -> TensorRecord:
+    o, l = page.offsets[i]
+    return _decode_record(memoryview(page.buf)[o:o + l], with_payload=with_payload)
+
+
+def read_record_partial(page: TensorPage, i: int, bits: int) -> TensorRecord:
+    """Flexible loading: read only the top ``bits`` bit-planes of record i.
+
+    I/O saved is real — only ``bits * plane_bytes`` of the payload region is
+    touched, matching the paper's reduced disk I/O claim (Fig. 11).
+    """
+    o, l = page.offsets[i]
+    return _decode_record(memoryview(page.buf)[o:o + l], with_payload=True, bits=bits)

@@ -1,0 +1,5 @@
+"""Data pipeline."""
+
+from .pipeline import SyntheticLM, make_batches
+
+__all__ = ["SyntheticLM", "make_batches"]

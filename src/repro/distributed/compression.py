@@ -1,0 +1,83 @@
+"""Error-feedback quantized gradient sync for the slow cross-pod hop.
+
+Production posture (DESIGN.md §5): within a pod, gradients reduce over fast
+ICI in bf16/f32; ACROSS pods (data-center interconnect, ~10× slower) they
+sync as int8 with per-tensor scale and error feedback. For two pods the
+quantized all-gather moves size/4 bytes vs 2×size/2 for a f32 all-reduce —
+an 8× cross-pod byte reduction, with the quantization residual carried to
+the next step (error feedback keeps SGD unbiased in the long run; Seide et
+al. 2014, 1-bit SGD).
+
+The quantizer is the NeurStore adaptive quantizer (paper Eq. 3) applied
+in-graph: gradients are "deltas" with narrow ranges, the same observation
+the paper exploits for storage.
+
+Usable two ways:
+* ``quantize_grad`` / ``dequantize_grad`` — jit-safe pair for custom
+  schedules;
+* ``cross_pod_sync`` — shard_map collective over the ``pod`` axis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def quantize_grad(g, err, nbit: int = 8):
+    """Error-feedback int quantization of one gradient tensor.
+
+    Returns (codes int8, scale, new_err). dequant = codes * scale.
+    Symmetric per-tensor scale (gradients are zero-centred deltas).
+    """
+    g32 = g.astype(jnp.float32) + err
+    amax = jnp.max(jnp.abs(g32))
+    levels = 2 ** (nbit - 1) - 1
+    scale = jnp.maximum(amax / levels, 1e-20)
+    codes = jnp.clip(jnp.round(g32 / scale), -levels, levels).astype(jnp.int8)
+    deq = codes.astype(jnp.float32) * scale
+    new_err = g32 - deq
+    return codes, scale, new_err
+
+
+def dequantize_grad(codes, scale):
+    return codes.astype(jnp.float32) * scale
+
+
+def init_error_state(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def cross_pod_sync(grads, err_state, mesh, *, axis: str = "pod", nbit: int = 8):
+    """Average gradients across the pod axis with int8 error feedback.
+
+    grads/err leaves must be sharded identically on the non-pod axes;
+    the pod axis itself carries replicated (per-pod-reduced) gradients.
+    """
+    n_pods = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+
+    def sync_leaf(g, err):
+        codes, scale, new_err = quantize_grad(g, err, nbit)
+        all_codes = jax.lax.all_gather(codes, axis)          # (P, ...) int8
+        all_scales = jax.lax.all_gather(scale, axis)         # (P,)
+        deq = all_codes.astype(jnp.float32) * all_scales.reshape(
+            (-1,) + (1,) * codes.ndim)
+        return jnp.mean(deq, axis=0).astype(g.dtype), new_err
+
+    def synced(gs, errs):
+        flat_g, treedef = jax.tree.flatten(gs)
+        flat_e = treedef.flatten_up_to(errs)
+        out = [sync_leaf(g, e) for g, e in zip(flat_g, flat_e)]
+        return (treedef.unflatten([o[0] for o in out]),
+                treedef.unflatten([o[1] for o in out]))
+
+    spec = P(axis)
+    fn = jax.shard_map(
+        synced, mesh=mesh,
+        in_specs=(spec, spec), out_specs=(spec, spec))
+    # Note: callers on the production mesh use per-leaf specs; this simple
+    # wrapper covers the replicated-per-pod case used by the tests.
+    return fn(grads, err_state)

@@ -1,0 +1,241 @@
+"""Logical-axis sharding context (GSPMD rules for the production mesh).
+
+Model code annotates activations with *logical* names
+(``constrain(x, "residual")``); the launcher activates a rule table mapping
+logical names → ``PartitionSpec`` over the live mesh. Outside a mesh context
+the calls are no-ops, so the same model code runs single-device smoke tests
+and 512-chip dry-runs unchanged.
+
+Rule tables encode the parallelism design of DESIGN.md §5:
+DP over (pod, data); TP over model; SP (sequence sharding of the residual
+stream) over model; EP (experts) over data; FSDP parameter sharding over
+data for the large 2D+ weights.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+def _rules_single_pod(seq_shard: bool, serve: bool = False) -> dict:
+    dp = ("data",)
+    tp = "model"
+    sp = tp if seq_shard else None
+    # Decode: shard attention on d_head. Replicating heads made GSPMD
+    # all-gather the full f32 wq/wk/wv per layer (256 MB/layer on deepseek
+    # decode_32k — §Perf iteration 7); dh-sharding keeps q/k/v projections,
+    # the cache update AND the cache reads fully local, at the cost of one
+    # small (B,KV,G,S) score all-reduce per layer.
+    decode = serve and not seq_shard
+    hd = tp
+    return {
+        # Activations.
+        "residual": P(dp, sp, None),          # (B, S, D) — SP between blocks
+        "residual_gathered": P(dp, None, None),
+        "heads": (P(dp, None, None, tp) if decode
+                  else P(dp, None, hd, None)),  # (B, S, H, dh)
+        "kv_heads": (P(dp, None, None, tp) if decode
+                     else P(dp, None, hd, None)),
+        "ffn": P(dp, None, tp),               # (B, S, F)
+        "logits": P(dp, None, tp),            # (B, S, V)
+        "tokens": P(dp, None),
+        "embeds_in": P(dp, None, None),
+        "rnn_state": P(dp, tp),               # (B, R)
+        "rnn_act": P(dp, None, tp),           # (B, S, R)
+        "rwkv_state": P(dp, tp, None, None),  # (B, H, dh, dh)
+        "rwkv_act": P(dp, None, tp, None),    # (B, S, H, dh)
+        # MoE.
+        "expert_in": P(dp, None, None),       # (E, C, D) — EP over data
+        "expert_h": P(dp, None, tp),          # (E, C, F)
+        # Grouped dispatch (B, E, C, D/F): tokens are batch-sharded before/
+        # after expert compute; hidden is E-sharded (EP) + F-sharded (TP) —
+        # the boundary between the two is the token all-to-all.
+        "moe_tokens": P(dp, None, None, None),
+        "moe_hidden": P(None, "data", None, tp),
+        # KV cache (decode), layout (B, KV, S, dh): batch over data; heads
+        # over model when they divide the axis, else sequence over model
+        # (adaptive — see cache_logical()).
+        "cache_bh": (P(dp, None, None, tp) if decode
+                     else P(dp, tp, None, None)),   # heads/dh sharded
+        "cache_bs": (P(dp, None, None, tp) if decode
+                     else P(dp, None, tp, None)),   # seq/dh sharded
+        "cache_conv": P(dp, None, tp),        # (B, w-1, R)
+        "cache_shift": P(dp, None),           # (B, D)
+        # Parameters.
+        "p_embed": P(tp, "data"),             # (V, D) vocab over model
+        "p_attn_qkv": (P(None, None, tp) if decode
+                       else P("data", tp, None)),   # decode: dh-sharded
+        "p_attn_o": (P(None, tp, None) if decode
+                     else P(tp, None, "data")),
+        "p_ffn_in": P("data", tp),            # (D, F)
+        "p_ffn_out": P(tp, "data"),           # (F, D)
+        "p_router": P("data", None),          # (D, E)
+        "p_expert_in": P(dp, None, tp),       # (E, D, F) — EP + TP
+        "p_expert_out": P(dp, tp, None),      # (E, F, D)
+        "p_rnn_in": P("data", tp),            # (D, R)
+        "p_rnn_sq": P("data", tp),            # (R, R)
+        "p_rnn_vec": P(tp,),                  # (R,)
+        "p_conv": P(None, tp),                # (4, R)
+        "p_vec": P(None,),                    # (D,) norms
+        "p_head": P("data", tp),              # (D, V)
+        "p_rwkv_lora_a": P("data", None),
+        "p_rwkv_lora_b": P(None, tp),
+        "p_rwkv_u": P(tp, None),              # (H, dh)
+        "scalar": P(),
+    }
+
+
+def _rules_dp(n_axes: int = 2) -> dict:
+    """Pure-DP + ZeRO-3 profile (hillclimb, EXPERIMENTS.md §Perf): batch
+    over the *flattened* mesh, parameters fully sharded over the flat mesh
+    on their largest dim and re-gathered per layer. No per-layer activation
+    collectives at all — the right profile for ≤10B dense models where TP
+    traffic dwarfs compute. Select with use_mesh(profile="dp")."""
+    flat = ("data", "model") if n_axes == 2 else ("pod", "data", "model")
+    dp = flat
+    return {
+        "residual": P(dp, None, None),
+        "residual_gathered": P(dp, None, None),
+        "heads": P(dp, None, None, None),
+        "kv_heads": P(dp, None, None, None),
+        "ffn": P(dp, None, None),
+        "logits": P(dp, None, None),
+        "tokens": P(dp, None),
+        "embeds_in": P(dp, None, None),
+        "rnn_state": P(dp, None),
+        "rnn_act": P(dp, None, None),
+        "rwkv_state": P(dp, None, None, None),
+        "rwkv_act": P(dp, None, None, None),
+        "expert_in": P(None, None, None),
+        "expert_h": P(None, None, None),
+        "moe_tokens": P(dp, None, None, None),
+        "moe_hidden": P(None, dp, None, None),
+        "cache_bh": P(dp, None, None, None),
+        "cache_bs": P(dp, None, None, None),
+        "cache_conv": P(dp, None, None),
+        "cache_shift": P(dp, None),
+        # ZeRO-3: every big param sharded over the flat mesh, dim 0.
+        "p_embed": P(dp, None),
+        "p_attn_qkv": P(dp, None, None),
+        "p_attn_o": P(None, None, dp),
+        "p_ffn_in": P(dp, None),
+        "p_ffn_out": P(None, dp),
+        "p_router": P(dp, None),
+        "p_expert_in": P(None, dp, None),
+        "p_expert_out": P(None, None, dp),
+        "p_rnn_in": P(dp, None),
+        "p_rnn_sq": P(dp, None),
+        "p_rnn_vec": P(dp,),
+        "p_conv": P(None, dp),
+        "p_vec": P(None,),
+        "p_head": P(dp, None),
+        "p_rwkv_lora_a": P(dp, None),
+        "p_rwkv_lora_b": P(None, dp),
+        "p_rwkv_u": P(dp, None),
+        "scalar": P(),
+    }
+
+
+def _serving_params(rules: dict) -> dict:
+    """Serving profile: no optimizer state → dense params fit replicated
+    over 'data' (TP-only). No per-step FSDP all-gathers. Expert weights
+    (EP over data) stay sharded — tokens travel, not weights."""
+    out = {}
+    for k, spec in rules.items():
+        if k.startswith("p_") and "expert" not in k:
+            out[k] = P(*[None if a == "data" else a for a in tuple(spec)])
+        else:
+            out[k] = spec
+    return out
+
+
+def _rules_multi_pod(seq_shard: bool, serve: bool = False) -> dict:
+    """Pod axis joins data-parallelism: DP over ('pod','data')."""
+    rules = _rules_single_pod(seq_shard, serve)
+    out = {}
+    for k, spec in rules.items():
+        parts = list(spec)
+        new = []
+        for axis in parts:
+            if axis == ("data",):
+                new.append(("pod", "data"))
+            elif axis == "data":
+                # parameter FSDP axis: shard over data only (pods replicate
+                # params — they all-gather over ICI within pod; gradient
+                # all-reduce crosses pods once per step).
+                new.append("data")
+            else:
+                new.append(axis)
+        out[k] = P(*new)
+    return out
+
+
+class ShardingCtx:
+    def __init__(self, mesh, rules: dict, serve: bool = False):
+        self.mesh = mesh
+        self.rules = rules
+        self.serve = serve
+
+    def spec(self, name: str) -> P:
+        return self.rules[name]
+
+    def constrain(self, x, name: str):
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, self.rules[name])
+        )
+
+
+def current() -> ShardingCtx | None:
+    return getattr(_state, "ctx", None)
+
+
+def cache_logical(kv_heads: int) -> str:
+    """Adaptive KV-cache sharding: heads over 'model' when they divide the
+    axis (deepseek kv=8 on model=8|4|2...), else sequence over 'model'
+    (glm4 kv=2, recurrentgemma kv=1 on model=16)."""
+    ctx = current()
+    if ctx is None:
+        return "cache_bh"
+    model_size = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape)).get("model", 1)
+    return "cache_bh" if kv_heads % model_size == 0 else "cache_bs"
+
+
+def constrain(x, name: str):
+    """Annotate activation x with logical sharding ``name`` (no-op w/o ctx)."""
+    ctx = current()
+    if ctx is None:
+        return x
+    return ctx.constrain(x, name)
+
+
+def spec(name: str) -> P:
+    ctx = current()
+    if ctx is None:
+        return P()
+    return ctx.spec(name)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh, multi_pod: bool = False, seq_shard: bool = True,
+             serve: bool = False, profile: str = "tp"):
+    if profile == "dp":
+        rules = _rules_dp(n_axes=3 if multi_pod else 2)
+    else:
+        rules = (_rules_multi_pod(seq_shard, serve) if multi_pod
+                 else _rules_single_pod(seq_shard, serve))
+        if serve:
+            rules = _serving_params(rules)
+    ctx = ShardingCtx(mesh, rules)
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = ctx
+    try:
+        with mesh:
+            yield ctx
+    finally:
+        _state.ctx = prev

@@ -1,0 +1,30 @@
+"""Pallas TPU kernels for NeurStore's compute hot-spots.
+
+* ``dequant_matmul`` — fused compute-on-compressed matmul (paper §4.3
+  adapted to TPU: dequantization happens tile-wise in VMEM inside the
+  matmul, so the full-precision weight never exists in HBM).
+* ``quantized_l2`` — batched quantized-L2 distance (the paper's AVX2
+  ``QuantizedL2Space``, §5), the HNSW search hot loop.
+
+Each kernel ships with ``ops.py`` jitted wrappers and ``ref.py`` pure-jnp
+oracles; tests validate in interpret mode (CPU) against the oracles.
+"""
+
+from . import ops, ref
+from .ops import (
+    dequant_matmul,
+    dequant_matmul_int4,
+    flash_attention,
+    pack_int4,
+    quantized_l2,
+)
+
+__all__ = [
+    "dequant_matmul",
+    "dequant_matmul_int4",
+    "flash_attention",
+    "ops",
+    "pack_int4",
+    "quantized_l2",
+    "ref",
+]

@@ -1,0 +1,113 @@
+"""Flash attention (forward) Pallas TPU kernel — grouped-GQA, causal/local.
+
+Motivation (EXPERIMENTS.md §Perf): the pure-JAX chunked attention used by
+the baseline train/prefill steps round-trips its (B, H, Sq, ck) f32 score
+tensors through HBM at every KV chunk — on qwen3-8b train_4k that score
+traffic dominates the memory roofline term. This kernel keeps scores,
+running max/sum and the accumulator in VMEM scratch across the KV sweep;
+only q/k/v tiles and the final output touch HBM, exactly like
+FlashAttention-2 on GPU but tiled for (8,128)-aligned VMEM and the MXU.
+
+Grid: (B·KV·G, Sq/bq, Sk/bk) with the KV sweep innermost. Blocks:
+q (bq, dh), k/v (bk, dh), VMEM scratch m/l (bq, 1) + acc (bq, dh).
+Causal masking prunes nothing structurally (grid is dense) but masked
+blocks contribute zeros — block-level skipping is a TODO noted in §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  n_k, block_q, block_k, scale, causal, window):
+    kk = pl.program_id(2)
+    qq = pl.program_id(1)
+
+    @pl.when(kk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                     # (bq, dh)
+    k = k_ref[0].astype(jnp.float32)                     # (bk, dh)
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    q_pos = qq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = kk * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = jnp.ones(s.shape, dtype=bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kk == n_k - 1)
+    def _store():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal=True, window=0,
+                           block_q=128, block_k=128, interpret=False):
+    """q: (B, Sq, H, dh); k, v: (B, Sk, KV, dh); grouped GQA, no KV repeat.
+
+    Returns (B, Sq, H, dh). Sq % block_q == Sk % block_k == 0 (ops.py pads).
+    """
+    b, sq, h, dh = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = 1.0 / (dh ** 0.5)
+    n_q = sq // block_q
+    n_k = sk // block_k
+    # Flatten (B, KV, G) into one grid axis; q/o indexed by (b, kv, g),
+    # k/v by (b, kv) — the group dim g reuses the same KV block.
+    qr = q.reshape(b, sq, kv, g, dh).transpose(0, 2, 3, 1, 4).reshape(
+        b * kv * g, sq, dh)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * kv, sk, dh)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * kv, sk, dh)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, n_k=n_k, block_q=block_q,
+                          block_k=block_k, scale=scale, causal=causal,
+                          window=window),
+        grid=(b * kv * g, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda i, qq, kk: (i, qq, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda i, qq, kk, g=g: (i // g, kk, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda i, qq, kk, g=g: (i // g, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda i, qq, kk: (i, qq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kv * g, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, kv, g, sq, dh).transpose(0, 3, 1, 2, 4).reshape(
+        b, sq, h, dh)

@@ -1,0 +1,91 @@
+"""Batched quantized-L2 distance Pallas kernel — the HNSW hot loop.
+
+TPU adaptation of the paper's AVX2 ``QuantizedL2Space`` (§5): one f32 query
+against a block of int8-quantized base tensors with per-row scale/zero-point,
+de-quantized in VREGs and reduced on the VPU. The HNSW graph walk stays on
+the host (control flow); each neighbour-expansion calls this with the
+frontier's candidate block.
+
+Grid: (N/bn, D/bd); the (bn, 1) partial-sum tile accumulates across the D
+sweep in VMEM scratch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["quantized_l2_pallas"]
+
+
+def _ql2_kernel(q_ref, codes_ref, scal_ref, o_ref, acc_ref, *, n_d, d_true, block_d):
+    dd = pl.program_id(1)
+
+    @pl.when(dd == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    scales = scal_ref[:, 0:1]
+    zps = scal_ref[:, 1:2]
+    mids = scal_ref[:, 2:3]
+    deq = (codes_ref[...].astype(jnp.float32) - zps) * scales
+    deq = jnp.where(scales == 0.0, mids, deq)
+    diff = deq - q_ref[...].astype(jnp.float32)  # (1, bd) broadcasts over rows
+    # Mask columns beyond the true dimension (padding would otherwise add
+    # ((0 - zp) * scale)^2 per padded column).
+    cols = jax.lax.broadcasted_iota(jnp.int32, diff.shape, 1) + dd * block_d
+    diff = jnp.where(cols < d_true, diff, 0.0)
+    acc_ref[...] += jnp.sum(diff * diff, axis=-1, keepdims=True)
+
+    @pl.when(dd == n_d - 1)
+    def _store():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_d", "d_true", "interpret"))
+def quantized_l2_pallas(
+    query,
+    codes,
+    scales,
+    zps,
+    mids,
+    *,
+    block_n: int = 128,
+    block_d: int = 512,
+    d_true: int | None = None,
+    interpret: bool = False,
+):
+    """Squared L2: f32 query (D,) vs N int8 rows (N, D) with per-row quant.
+
+    Returns (N,) f32. Inputs must be padded to block multiples (ops.py pads;
+    padded rows get scale=0/mid=0 and are sliced off after; ``d_true`` masks
+    padded columns in-kernel).
+    """
+    n, d = codes.shape
+    assert query.shape == (d,)
+    assert n % block_n == 0 and d % block_d == 0
+    n_d = d // block_d
+    d_true = d if d_true is None else d_true
+    scal = jnp.stack(
+        [scales.astype(jnp.float32), zps.astype(jnp.float32), mids.astype(jnp.float32)],
+        axis=1,
+    )  # (N, 3)
+    grid = (n // block_n, n_d)
+    out = pl.pallas_call(
+        functools.partial(_ql2_kernel, n_d=n_d, d_true=d_true, block_d=block_d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_d), lambda i, dd: (0, dd)),
+            pl.BlockSpec((block_n, block_d), lambda i, dd: (i, dd)),
+            pl.BlockSpec((block_n, 3), lambda i, dd: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, 1), lambda i, dd: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_n, 1), jnp.float32)],
+        interpret=interpret,
+    )(query.reshape(1, d), codes, scal)
+    return out[:, 0]

@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for the NeurStore Pallas kernels.
+
+These define the exact semantics the kernels must reproduce; every kernel
+test sweeps shapes/dtypes and asserts allclose against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "flash_attention_ref",
+    "dequantize_weight_ref",
+    "dequant_matmul_ref",
+    "unpack_int4_ref",
+    "dequant_matmul_int4_ref",
+    "quantized_l2_ref",
+]
+
+
+def dequantize_weight_ref(base, base_scale, base_zp, delta, delta_scale, delta_zp):
+    """W = dq(base_int8) + dq(delta_int8)  — the augmented-graph Add node.
+
+    Base uses plain asymmetric dequant; delta uses bin-centre dequant
+    (matching ``repro.core.quantize.dequantize_delta``).
+    """
+    b = (base.astype(jnp.float32) - base_zp) * base_scale
+    d = (delta.astype(jnp.float32) - delta_zp + 0.5) * delta_scale
+    return b + d
+
+
+def dequant_matmul_ref(x, base, base_scale, base_zp, delta, delta_scale, delta_zp):
+    """y = x @ (dq(base) + dq(delta)); x:(M,K) f32/bf16, base/delta:(K,N) int8."""
+    w = dequantize_weight_ref(base, base_scale, base_zp, delta, delta_scale, delta_zp)
+    return jnp.dot(x.astype(jnp.float32), w, preferred_element_type=jnp.float32)
+
+
+def unpack_int4_ref(packed):
+    """(K//2, N) uint8 → (K, N) int32 in [0, 15]; row 2k = low nibble."""
+    low = (packed & 0xF).astype(jnp.int32)
+    high = (packed >> 4).astype(jnp.int32)
+    k2, n = packed.shape
+    return jnp.stack([low, high], axis=1).reshape(2 * k2, n)
+
+
+def dequant_matmul_int4_ref(x, base, base_scale, base_zp, packed_delta,
+                            delta_scale, delta_zp):
+    """Same as :func:`dequant_matmul_ref` with the delta 4-bit packed (2/byte).
+
+    This is NeurStore flexible loading at b=4: weight HBM bytes are
+    1 (base) + 0.5 (delta) = 1.5 per element vs 2.0 for bf16.
+    """
+    delta = unpack_int4_ref(packed_delta)
+    b = (base.astype(jnp.float32) - base_zp) * base_scale
+    d = (delta.astype(jnp.float32) - delta_zp + 0.5) * delta_scale
+    return jnp.dot(x.astype(jnp.float32), b + d, preferred_element_type=jnp.float32)
+
+
+def quantized_l2_ref(query, codes, scales, zps, mids):
+    """Squared L2 between f32 query (D,) and N quantized rows (N, D).
+
+    Row i dequantizes as (codes[i] - zps[i]) * scales[i], or the constant
+    mids[i] when scales[i] == 0 — mirroring ``hnsw.quantized_l2_batch``.
+    """
+    deq = (codes.astype(jnp.float32) - zps[:, None]) * scales[:, None]
+    deq = jnp.where(scales[:, None] == 0.0, mids[:, None], deq)
+    diff = deq - query[None, :].astype(jnp.float32)
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """Oracle: grouped-GQA softmax attention with causal/local masking.
+
+    q: (B, Sq, H, dh); k, v: (B, Sk, KV, dh)."""
+    b, sq, h, dh = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, dh).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bckd->bkgqc", qg, k.astype(jnp.float32))
+    s = s / (dh ** 0.5)
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask = mask & (qp >= kp)
+    if window > 0:
+        mask = mask & ((qp - kp) < window)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqc,bckd->bkgqd", w, v.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dh).astype(q.dtype)

@@ -1,0 +1,1 @@
+"""Launch layer: meshes, sharded steps, dry-run, trainer."""

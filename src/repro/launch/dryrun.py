@@ -1,0 +1,339 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST precede any jax import — jax locks the device
+count at first init. This module (and only this module) sees 512 host
+devices; smoke tests and benches see 1.
+
+Per cell we report:
+  * ``compiled.memory_analysis()``  — per-device bytes (fits-in-HBM proof)
+  * ``compiled.cost_analysis()``    — per-device HLO FLOPs / bytes accessed
+  * collective bytes parsed from the optimized HLO (hlo_stats.py)
+  * the three roofline terms + dominant bottleneck (EXPERIMENTS.md §Roofline)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod --out dryrun.json
+"""
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, list_archs
+from ..distributed import sharding as sh
+from ..models.config import SHAPES, ModelConfig, ShapeConfig
+from . import shardings as shd
+from .hlo_stats import collective_stats
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh
+from .specs import batch_specs, decode_cache_specs, model_specs, opt_specs
+from .steps import (
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    pick_microbatches,
+)
+
+
+def _probe_cfg(cfg: ModelConfig, n_periods: int) -> ModelConfig:
+    import dataclasses
+    n_layers = n_periods * len(cfg.period) + len(cfg.tail)
+    return dataclasses.replace(cfg, n_layers=n_layers,
+                               unroll_periods=True, scan_unroll=True)
+
+
+# Sub-quadratic archs (rwkv6/recurrentgemma) are linear-in-S per layer
+# (windowed attention, chunked linear recurrence), so long-sequence probes
+# run at this length and scale linearly — fully unrolling 1024 RWKV chunk
+# steps would blow up probe compile time. (The RG-LRU associative scan is
+# O(S log S); the log factor on its elementwise term is ≤3 extra levels at
+# 32k — noted in EXPERIMENTS.md.)
+_SUBQUAD_PROBE_SEQ = 4096
+
+
+def _probe_shape(shape: ShapeConfig, cfg: ModelConfig,
+                 n_micro: int | None = None) -> tuple[ShapeConfig, float]:
+    """Probe shape + linear scale factor back to the true shape.
+
+    Train probes run ONE microbatch (no accumulation scan) so the body is
+    seen exactly once; step total = n_micro × probe (+ O(N) optimizer
+    update, negligible). Sub-quadratic archs probe long sequences at
+    _SUBQUAD_PROBE_SEQ and scale by S/S_probe (all terms linear in S)."""
+    import dataclasses
+    scale = 1.0
+    s = shape.seq_len
+    b = shape.global_batch
+    if shape.is_train and n_micro is None:
+        n_micro = pick_microbatches(cfg, shape.global_batch)
+    if shape.is_train:
+        b = shape.global_batch // n_micro
+        scale *= n_micro
+    if cfg.subquadratic and shape.kind != "decode" and s > _SUBQUAD_PROBE_SEQ:
+        scale *= s / _SUBQUAD_PROBE_SEQ
+        s = _SUBQUAD_PROBE_SEQ
+    return dataclasses.replace(shape, seq_len=s, global_batch=b), scale
+
+
+def probe_costs(cfg: ModelConfig, shape: ShapeConfig, mesh, multi_pod: bool,
+                n_devices: int, profile: str = "tp",
+                compressed: bool = False) -> dict:
+    """Scan-aware cost extraction: XLA cost_analysis counts scan/while
+    bodies ONCE, so probes compile fully-unrolled 1-period and 2-period
+    configs and extrapolate: cost(P) = cost(1) + (P-1)·[cost(2) - cost(1)],
+    scaled back for microbatching / probe sequence length."""
+    pshape, scale = _probe_shape(shape, cfg,
+                                 n_micro=1 if profile == "dp" else None)
+
+    def one(n_periods):
+        pcfg = _probe_cfg(cfg, n_periods)
+        compiled, _ = lower_cell(pcfg, pshape, mesh, multi_pod,
+                                 force_single_micro=True, profile=profile,
+                                 compressed=compressed)
+        cost = compiled.cost_analysis() or {}
+        colls = collective_stats(compiled.as_text(), n_devices)
+        return (float(cost.get("flops", 0.0)),
+                float(cost.get("bytes accessed", 0.0)),
+                colls["total_bytes"], colls)
+
+    f1, b1, c1, colls1 = one(1)
+    if cfg.n_periods > 1:
+        f2, b2, c2, colls2 = one(2)
+    else:
+        f2, b2, c2, colls2 = f1, b1, c1, colls1
+    p = cfg.n_periods
+    ext = lambda a, b: (a + (p - 1) * max(b - a, 0.0)) * scale
+    coll_kinds = {
+        k: ext(colls1.get(k, 0.0), colls2.get(k, 0.0))
+        for k in ("all-reduce", "all-gather", "reduce-scatter",
+                  "all-to-all", "collective-permute")}
+    return {
+        "flops": ext(f1, f2),
+        "bytes": ext(b1, b2),
+        "collective_bytes": ext(c1, c2),
+        "collective_kinds": coll_kinds,
+        "probe": {"flops_1p": f1, "flops_2p": f2, "scale": scale,
+                  "probe_seq": pshape.seq_len},
+    }
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6·N·D (train) / 2·N·D (fwd) with N = active params, D = tokens."""
+    n = cfg.n_active_params
+    if shape.is_train:
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, multi_pod: bool,
+               force_single_micro: bool = False, profile: str = "tp",
+               compressed: bool = False):
+    """Build shardings + lower + compile one cell; returns (compiled, lowered)."""
+    seq_shard = shape.kind != "decode"
+    with sh.use_mesh(mesh, multi_pod=multi_pod, seq_shard=seq_shard,
+                     serve=not shape.is_train, profile=profile) as ctx:
+        p_specs = model_specs(cfg)
+        p_shard = shd.named(shd.param_specs_tree(p_specs, ctx), mesh)
+        b_specs = batch_specs(cfg, shape)
+        b_shard = shd.named(shd.batch_specs_tree(b_specs, ctx), mesh)
+        if shape.is_train:
+            big = cfg.n_params > 100e9
+            moment_dtype = jnp.bfloat16 if big else jnp.float32
+            grad_dtype = jnp.bfloat16 if big else jnp.float32
+            o_specs = opt_specs(cfg, moment_dtype)
+            o_shard = shd.named(
+                shd.opt_specs_tree(o_specs, shd.param_specs_tree(p_specs, ctx)),
+                mesh)
+            n_micro = (1 if force_single_micro or profile == "dp"
+                       else pick_microbatches(cfg, shape.global_batch))
+            step = make_train_step(cfg, n_micro, grad_dtype=grad_dtype)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(p_specs, o_specs, b_specs)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg)
+            jitted = jax.jit(step, in_shardings=(p_shard, b_shard))
+            lowered = jitted.lower(p_specs, b_specs)
+        else:  # decode
+            c_specs = decode_cache_specs(cfg, shape)
+            c_shard = shd.named(
+                shd.cache_specs_tree(c_specs, ctx, cfg.n_kv_heads), mesh)
+            pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+            if compressed:
+                # NeurStore storage format as the runtime weight format.
+                from .compressed_serve import (
+                    compressed_param_specs,
+                    make_compressed_serve_step,
+                )
+                p_specs = compressed_param_specs(cfg)
+                p_shard = shd.named(
+                    shd.compressed_param_specs_tree(p_specs, ctx), mesh)
+                step = make_compressed_serve_step(cfg)
+            else:
+                step = make_serve_step(cfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, c_shard, b_shard, None),
+                out_shardings=(None, c_shard),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(p_specs, c_specs, b_specs, pos_spec)
+        compiled = lowered.compile()
+        return compiled, lowered
+
+
+def analyse(compiled, costs: dict, cfg: ModelConfig, shape: ShapeConfig,
+            n_devices: int) -> dict:
+    mem = compiled.memory_analysis()
+    flops_dev = costs["flops"]
+    bytes_dev = costs["bytes"]
+    coll_dev = costs["collective_bytes"]
+    t_compute = flops_dev / PEAK_FLOPS_BF16
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_flops_total = flops_dev * n_devices
+    return {
+        "arch": cfg.name,
+        "shape": shape.name,
+        "n_devices": n_devices,
+        "per_device": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_hbm_bytes": (mem.argument_size_in_bytes
+                               + mem.output_size_in_bytes
+                               - mem.alias_size_in_bytes
+                               + mem.temp_size_in_bytes),
+            "hlo_flops": flops_dev,
+            "hlo_bytes": bytes_dev,
+            "collective_bytes": coll_dev,
+        },
+        "collectives": costs.get("collective_kinds", {}),
+        "probe": costs.get("probe", {}),
+        "roofline_s": terms,
+        "bottleneck": bottleneck,
+        "model_flops": mf,
+        "useful_flops_ratio": mf / hlo_flops_total if hlo_flops_total else 0.0,
+        # Fraction of the *compute* roofline (meaningful for train/prefill).
+        "roofline_fraction": (
+            mf / n_devices / PEAK_FLOPS_BF16 / max(terms.values())
+            if max(terms.values()) > 0 else 0.0),
+        # Decode cells are weight/cache-bandwidth bound: the ideal step time
+        # is one pass over the per-device arguments (params + cache). This
+        # is the number to hillclimb for decode shapes.
+        "ideal_memory_s": mem.argument_size_in_bytes / HBM_BW,
+        "bandwidth_fraction": (
+            (mem.argument_size_in_bytes / HBM_BW) / max(terms.values())
+            if max(terms.values()) > 0 else 0.0),
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
+             probes: bool = True, profile: str = "tp",
+             compressed: bool = False):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not cfg.supports_shape(shape_name):
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": ("encoder-only: no decode step"
+                           if not cfg.has_decode
+                           else "full attention: long_500k needs sub-quadratic")}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    # Full-depth compile: proves the sharding config is coherent and gives
+    # the per-device memory analysis.
+    compiled, lowered = lower_cell(cfg, shape, mesh, multi_pod,
+                                   profile=profile, compressed=compressed)
+    dt = time.time() - t0
+    if probes:
+        # Scan-aware roofline costs from 1-period/2-period probe compiles.
+        costs = probe_costs(cfg, shape, mesh, multi_pod, n_dev, profile,
+                            compressed)
+    else:
+        cost = compiled.cost_analysis() or {}
+        colls = collective_stats(compiled.as_text(), n_dev)
+        costs = {"flops": float(cost.get("flops", 0)),
+                 "bytes": float(cost.get("bytes accessed", 0)),
+                 "collective_bytes": colls["total_bytes"],
+                 "collective_kinds": colls}
+    rec = analyse(compiled, costs, cfg, shape, n_dev)
+    rec["compile_s"] = round(dt, 1)
+    rec["multi_pod"] = multi_pod
+    if verbose:
+        mem = compiled.memory_analysis()
+        print(f"== {arch} × {shape_name} ({'multi' if multi_pod else 'single'}-pod, "
+              f"{n_dev} devices) compiled in {dt:.0f}s")
+        print(f"   memory_analysis: {mem}")
+        print(f"   peak_hbm/dev: {rec['per_device']['peak_hbm_bytes']/2**30:.2f} GiB"
+              f" (HBM 16 GiB)")
+        print(f"   per-step per-device: flops={rec['per_device']['hlo_flops']:.3e} "
+              f"bytes={rec['per_device']['hlo_bytes']:.3e} "
+              f"collective={rec['per_device']['collective_bytes']:.3e}")
+        print(f"   collective MB: "
+              f"{ {k: round(v/1e6,1) for k,v in rec['collectives'].items() if v} }")
+        print(f"   roofline terms (s): "
+              f"compute={rec['roofline_s']['compute']:.4f} "
+              f"memory={rec['roofline_s']['memory']:.4f} "
+              f"collective={rec['roofline_s']['collective']:.4f} "
+              f"→ {rec['bottleneck']}-bound; "
+              f"useful-FLOP ratio {rec['useful_flops_ratio']:.2f}; "
+              f"roofline fraction {rec['roofline_fraction']:.2%}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list_archs() + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--profile", default="tp", choices=["tp", "dp"])
+    ap.add_argument("--compressed-serve", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = list_archs() if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    results.append(run_cell(arch, shape, mp,
+                                            profile=args.profile,
+                                            compressed=args.compressed_serve))
+                except Exception as e:  # a failure here is a bug in the system
+                    results.append({"arch": arch, "shape": shape,
+                                    "multi_pod": mp, "error": repr(e)[:500]})
+                    print(f"!! {arch} × {shape} (multi_pod={mp}) FAILED: {e!r}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    n_err = sum(1 for r in results if "error" in r)
+    n_skip = sum(1 for r in results if r.get("skipped"))
+    print(f"\n{len(results)} cells: {len(results)-n_err-n_skip} ok, "
+          f"{n_skip} skipped (documented), {n_err} errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,95 @@
+"""Collective-traffic extraction from optimized HLO text (§Roofline source).
+
+``cost_analysis()`` has no collective bytes, so we parse the compiled
+module: every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute result shape (per-device, post-SPMD) is converted to
+bytes moved per device under ring algorithms:
+
+    all-gather          out × (n-1)/n
+    reduce-scatter      out × (n-1)        (ring RS moves (n-1)/n of input)
+    all-reduce          2 × size × (n-1)/n (RS + AG)
+    all-to-all          size × (n-1)/n
+    collective-permute  size
+"""
+
+from __future__ import annotations
+
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 0.5, "u4": 0.5,
+}
+
+_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|c64|c128)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[^=\s]+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{[^}]*\}[^}]*\}|\[[0-9,]+\]<=\[\d+\])")
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return default
+    g = m.group(1)
+    if g.startswith("{{"):
+        first = g[2:].split("}")[0]
+        return len([x for x in first.split(",") if x.strip() != ""])
+    # iota form: [g0,g1,...]<=[N] — group size is the product of all dims
+    # except the number of groups; for [G,n]<=[N] it's n = N/G.
+    dims = [int(x) for x in g[1:g.index("]")].split(",")]
+    total = int(g[g.index("<=[") + 3:-1])
+    n_groups = dims[0]
+    return max(total // n_groups, 1) if len(dims) > 1 else dims[0]
+
+
+def collective_stats(hlo_text: str, n_devices: int) -> dict:
+    """Per-device collective bytes, split by op kind."""
+    out = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0, "count": 0}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        if "-done" in line.split("=")[1].split("(")[0]:
+            continue
+        size = _shape_bytes(type_str)
+        n = _group_size(line, n_devices)
+        if kind == "all-gather":
+            moved = size * (n - 1) / max(n, 1)
+        elif kind == "reduce-scatter":
+            moved = size * (n - 1)
+        elif kind == "all-reduce":
+            moved = 2 * size * (n - 1) / max(n, 1)
+        elif kind == "all-to-all":
+            moved = size * (n - 1) / max(n, 1)
+        else:  # collective-permute
+            moved = size
+        out[kind] += moved
+        out["count"] += 1
+    out["total_bytes"] = sum(v for k, v in out.items()
+                             if k not in ("count", "total_bytes"))
+    return out
+
+
+def hlo_op_histogram(hlo_text: str, top: int = 15) -> list[tuple[str, int]]:
+    """Crude op-name histogram of the optimized module (perf-loop aid)."""
+    ops: dict[str, int] = {}
+    for m in re.finditer(r"=\s*(?:\([^)]*\)|\S+)\s+([a-z][\w\-]*)\(", hlo_text):
+        ops[m.group(1)] = ops.get(m.group(1), 0) + 1
+    return sorted(ops.items(), key=lambda kv: -kv[1])[:top]

@@ -1,0 +1,240 @@
+"""Path-based sharding assignment for parameter / optimizer / cache pytrees.
+
+Every leaf of the params tree is mapped to a logical axis name (DESIGN.md §5
+rules in ``repro.distributed.sharding``) by its path and rank; leaves under
+``periods`` are scan-stacked and get a leading replicated dim.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..distributed import sharding as sh
+
+
+def _key_str(entry) -> str:
+    if hasattr(entry, "key"):
+        return str(entry.key)
+    if hasattr(entry, "idx"):
+        return f"[{entry.idx}]"
+    return str(entry)
+
+
+def _logical_for_param(path: tuple, ndim: int, stacked: bool) -> str:
+    keys = [_key_str(k) for k in path]
+    name = keys[-1]
+    base_ndim = ndim - (1 if stacked else 0)
+    in_seq = "seq" in keys
+    if name == "embed":
+        return "p_embed"
+    if name == "lm_head":
+        return "p_head"
+    if name in ("norm1", "norm2", "final_norm", "q_norm", "k_norm", "ln_w", "mu"):
+        return "p_vec"
+    if name in ("wq", "wk", "wv") and in_seq and base_ndim == 3:
+        return "p_attn_qkv"
+    if name == "wo" and in_seq and base_ndim == 3:
+        return "p_attn_o"
+    if name in ("wx", "wgate"):
+        return "p_rnn_in"
+    if name in ("wa", "wi") and in_seq:
+        return "p_rnn_sq"
+    if name == "conv":
+        return "p_conv"
+    if name == "lam":
+        return "p_rnn_vec"
+    if name == "u":
+        return "p_rwkv_u"
+    if name == "w_lora_a":
+        return "p_rwkv_lora_a"
+    if name == "w_lora_b":
+        return "p_rwkv_lora_b"
+    if name == "router":
+        return "p_router"
+    if name in ("wg", "wu") and base_ndim == 3:
+        return "p_expert_in"
+    if name == "wd" and base_ndim == 3:
+        return "p_expert_out"
+    # 2D channel/sequence projections: (D, F)-like → in; (F, D)-like → out.
+    if name in ("wg", "wu", "w1", "wk", "wr", "wkx") and base_ndim == 2:
+        return "p_ffn_in"
+    if name in ("wd", "w2", "wv", "wo") and base_ndim == 2:
+        return "p_ffn_out"
+    return "p_vec"  # conservative: replicated
+
+
+def _logical_for_cache(path: tuple) -> str:
+    name = _key_str(path[-1])
+    if name in ("k", "v"):
+        return None  # adaptive — resolved against the live mesh below
+    if name == "h":
+        return "rnn_state"
+    if name == "conv":
+        return "cache_conv"
+    if name == "wkv":
+        return "rwkv_state"
+    if name in ("shift_tm", "shift_cm"):
+        return "cache_shift"
+    raise ValueError(f"unknown cache leaf {name}")
+
+
+def _spec_with_stack(spec: P, stacked: bool) -> P:
+    if not stacked:
+        return spec
+    return P(*((None,) + tuple(spec)))
+
+
+# Alternate specs tried in order when a dim is not divisible by its mesh
+# axis (in_shardings demand exact divisibility; constraints do not):
+#   * KV-head dims (8, 2, 1 heads) can't split over model=16 → shard d_head
+#     or replicate;
+#   * granite's 40 experts can't split over data=16 → shard (D, F) instead;
+#   * odd vocabs (49155, 504) replicate the vocab dim.
+_ALTERNATES = {
+    "p_attn_qkv": [P("data", "model", None), P("data", None, "model"),
+                   P("data", None, None)],
+    "p_attn_o": [P("model", None, "data"), P(None, "model", "data"),
+                 P(None, None, "data")],
+    "p_expert_in": [P(("data",), None, "model"), P(None, "data", "model"),
+                    P(None, None, "model")],
+    "p_expert_out": [P(("data",), "model", None), P(None, "model", "data"),
+                     P(None, "model", None)],
+    "p_embed": [P("model", "data"), P(None, "data"), P(None, "model")],
+    "p_head": [P("data", "model"), P("data", None), P(None, None)],
+    "p_router": [P("data", None), P(None, None)],
+}
+
+
+def _axis_size(mesh, axis) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= sizes[a]
+        return n
+    return sizes[axis]
+
+
+def _fits(spec: P, shape: tuple, mesh) -> bool:
+    for dim, axis in zip(shape, tuple(spec)):
+        if dim % _axis_size(mesh, axis):
+            return False
+    return True
+
+
+def _drop_misfits(spec: P, shape: tuple, mesh) -> P:
+    fixed = []
+    for i, axis in enumerate(tuple(spec)):
+        dim = shape[i] if i < len(shape) else 1
+        fixed.append(axis if dim % _axis_size(mesh, axis) == 0 else None)
+    return P(*fixed)
+
+
+def fit_spec(logical: str, spec: P, shape: tuple, mesh) -> P:
+    """First alternate whose axes divide ``shape``; else drop offenders."""
+    if _fits(spec, shape, mesh):
+        return spec
+    for alt in _ALTERNATES.get(logical, []):
+        if _fits(alt, shape, mesh):
+            return alt
+    return _drop_misfits(spec, shape, mesh)
+
+
+def param_specs_tree(params_tree, ctx: sh.ShardingCtx, kv_heads: int | None = None):
+    """PartitionSpec pytree for params (or optimizer moments — same shape)."""
+
+    def assign(path, leaf):
+        keys = [_key_str(k) for k in path]
+        stacked = "periods" in keys
+        logical = _logical_for_param(path, leaf.ndim, stacked)
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        spec = fit_spec(logical, ctx.spec(logical), shape, ctx.mesh)
+        return _spec_with_stack(spec, stacked)
+
+    return jax.tree_util.tree_map_with_path(assign, params_tree)
+
+
+def cache_specs_tree(cache_tree, ctx: sh.ShardingCtx, kv_heads: int):
+    model_size = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape)).get("model", 1)
+    kv_logical = "cache_bh" if kv_heads % model_size == 0 else "cache_bs"
+
+    def assign(path, leaf):
+        keys = [_key_str(k) for k in path]
+        stacked = "periods" in keys
+        logical = _logical_for_cache(path) or kv_logical
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        spec = fit_spec(logical, ctx.spec(logical), shape, ctx.mesh)
+        return _spec_with_stack(spec, stacked)
+
+    return jax.tree_util.tree_map_with_path(assign, cache_tree)
+
+
+def batch_specs_tree(batch_tree, ctx: sh.ShardingCtx):
+    def assign(path, leaf):
+        name = _key_str(path[-1])
+        if name in ("tokens", "labels", "mask"):
+            logical = "tokens"
+        elif name == "embeds":
+            logical = "embeds_in"
+        else:
+            return P()
+        return fit_spec(logical, ctx.spec(logical), leaf.shape, ctx.mesh)
+
+    return jax.tree_util.tree_map_with_path(assign, batch_tree)
+
+
+def opt_specs_tree(opt_tree, params_specs):
+    """Optimizer state mirrors param shardings; step is replicated."""
+    return {
+        "m": params_specs,
+        "v": params_specs,
+        "step": P(),
+    }
+
+
+def named(tree, mesh):
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def compressed_param_specs_tree(qtree, ctx: sh.ShardingCtx):
+    """Specs for storage-format weight trees (compressed serving).
+
+    Each quantized group {base, packed, scales…} inherits the logical spec
+    of its original tensor: ``base`` keeps the full-shape spec; ``packed``
+    (dim0 halved, trailing dims flattened) keeps the dim-0 axis plus the
+    first non-None trailing axis; scalars replicate.
+    """
+    is_q = lambda x: isinstance(x, dict) and ("raw" in x or "base" in x)
+
+    def assign(path, q):
+        keys = [_key_str(k) for k in path]
+        stacked = "periods" in keys
+        if "raw" in q:
+            leaf = q["raw"]
+            logical = _logical_for_param(path, leaf.ndim, stacked)
+            shape = leaf.shape[1:] if stacked else leaf.shape
+            spec = fit_spec(logical, ctx.spec(logical), shape, ctx.mesh)
+            return {"raw": _spec_with_stack(spec, stacked)}
+        base = q["base"]
+        logical = _logical_for_param(path, base.ndim, stacked)
+        shape = base.shape[1:] if stacked else base.shape
+        spec = fit_spec(logical, ctx.spec(logical), shape, ctx.mesh)
+        tail_axis = next((a for a in tuple(spec)[1:] if a is not None), None)
+        pshape = q["packed"].shape[1:] if stacked else q["packed"].shape
+        pspec = _drop_misfits(P(tuple(spec)[0] if spec else None, tail_axis),
+                              pshape, ctx.mesh)
+        out = {
+            "base": _spec_with_stack(spec, stacked),
+            "packed": _spec_with_stack(pspec, stacked),
+        }
+        for k in ("bs", "bz", "bmid", "ds", "dz"):
+            out[k] = _spec_with_stack(P(), stacked)
+        return out
+
+    return jax.tree_util.tree_map_with_path(assign, qtree, is_leaf=is_q)

@@ -1,0 +1,59 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape) cell.
+
+No device allocation — the dry-run lowers against these (the shannon/kernels
+pattern: weak-type-correct, shardable specs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models import cache_specs, param_specs
+from ..models.config import ModelConfig, ShapeConfig
+from ..optim import adamw_init
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    specs = {}
+    if cfg.frontend == "embeddings":
+        specs["embeds"] = jax.ShapeDtypeStruct(
+            (b, s, cfg.d_model), jnp.dtype(cfg.compute_dtype))
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if shape.is_train:
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return specs
+
+
+def model_specs(cfg: ModelConfig):
+    return param_specs(cfg)
+
+
+def opt_specs(cfg: ModelConfig, moment_dtype=jnp.float32):
+    params = param_specs(cfg)
+    out = jax.eval_shape(adamw_init, params)
+    if moment_dtype != jnp.float32:
+        cast = lambda s: jax.ShapeDtypeStruct(s.shape, moment_dtype)
+        out = {"m": jax.tree.map(cast, out["m"]),
+               "v": jax.tree.map(cast, out["v"]),
+               "step": out["step"]}
+    return out
+
+
+def decode_cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    return cache_specs(cfg, shape.global_batch, shape.seq_len)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Everything the lowered step consumes, keyed by argument name."""
+    out = {"batch": batch_specs(cfg, shape), "params": model_specs(cfg)}
+    if shape.is_train:
+        out["opt_state"] = opt_specs(cfg)
+    if shape.kind == "decode":
+        out["cache"] = decode_cache_specs(cfg, shape)
+        out["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+    return out

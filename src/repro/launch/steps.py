@@ -1,0 +1,99 @@
+"""Jittable train / prefill / serve steps for every architecture.
+
+``make_train_step`` builds the canonical production step: microbatched
+gradient accumulation (lax.scan), remat-per-period forward, AdamW update
+with sharded moments. Microbatching both bounds activation memory and lets
+XLA overlap the data-parallel gradient reduce-scatter of microbatch *i*
+with the compute of *i+1*.
+
+``make_serve_step`` is one decode token against the KV/state cache;
+``make_prefill_step`` is a full forward returning last-position logits
+(returning (B, S, V) logits at 32k prefill would be a ~300 GB output).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..models import decode_step, forward, loss_fn
+from ..models.config import ModelConfig
+from ..optim import adamw_update
+
+
+def pick_microbatches(cfg: ModelConfig, global_batch: int) -> int:
+    """Microbatch count heuristic: keep per-microbatch tokens ≲ 128k for
+    big-d models (activation + logits memory), ≲ 256k otherwise."""
+    micro = 16 if cfg.d_model > 4096 or cfg.n_experts >= 64 else 32
+    micro = min(micro, global_batch)
+    while global_batch % micro:
+        micro //= 2
+    return max(global_batch // micro, 1)
+
+
+def make_train_step(cfg: ModelConfig, n_microbatches: int = 1, *,
+                    lr: float = 1e-4, grad_dtype=None):
+    """Returns train_step(params, opt_state, batch) → (params, opt, metrics).
+
+    ``grad_dtype``: accumulation dtype for the grad sum (f32 default;
+    bf16 for the 480B-scale configs where f32 accumulators don't fit HBM).
+    """
+    acc_dtype = grad_dtype or jnp.float32
+
+    def train_step(params, opt_state, batch):
+        def split(x):
+            return x.reshape((n_microbatches, x.shape[0] // n_microbatches)
+                             + x.shape[1:])
+
+        grad_fn = jax.value_and_grad(lambda p, b: loss_fn(p, b, cfg)[0])
+
+        if n_microbatches == 1:  # no accumulation scan (dry-run probes)
+            loss, grads = grad_fn(params, batch)
+            params, opt_state = adamw_update(params, grads, opt_state, lr=lr)
+            return params, opt_state, {"loss": loss}
+
+        micro_batches = jax.tree.map(split, batch)
+
+        def micro_step(carry, mb):
+            gsum, lsum = carry
+            loss, grads = grad_fn(params, mb)
+            gsum = jax.tree.map(
+                lambda a, g: a + g.astype(acc_dtype), gsum, grads)
+            return (gsum, lsum + loss), None
+
+        gzero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, acc_dtype), params)
+        (gsum, lsum), _ = jax.lax.scan(
+            micro_step, (gzero, jnp.zeros((), jnp.float32)), micro_batches)
+        grads = jax.tree.map(lambda g: g / n_microbatches, gsum)
+        params, opt_state = adamw_update(params, grads, opt_state, lr=lr)
+        metrics = {"loss": lsum / n_microbatches}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        return loss_fn(params, batch, cfg)[0]
+    return eval_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits = forward(params, batch, cfg)
+        return logits[:, -1, :].astype(jnp.float32)  # (B, V)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One greedy decode token for the whole batch."""
+
+    def serve_step(params, cache, batch, pos):
+        logits, new_cache = decode_step(params, cache, batch, pos, cfg)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+
+    return serve_step

@@ -1,0 +1,25 @@
+"""Composable model zoo: dense/GQA/MoE transformers, RG-LRU hybrid, RWKV6."""
+
+from .config import SHAPES, ModelConfig, ShapeConfig
+from .transformer import (
+    cache_specs,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    param_specs,
+)
+
+__all__ = [
+    "SHAPES",
+    "ModelConfig",
+    "ShapeConfig",
+    "cache_specs",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_params",
+    "loss_fn",
+    "param_specs",
+]

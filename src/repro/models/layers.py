@@ -1,0 +1,328 @@
+"""Dense transformer layers: norms, RoPE, chunked attention, MLPs, MoE.
+
+Pure-functional JAX. Every layer has (a) a sequence ``forward`` used by
+train/prefill, and (b) a single-token ``decode`` step against a cache.
+Attention is flash-style chunked (lax.scan over KV blocks with running
+max/sum) so 32k-prefill and 4k-train never materialize (S, S) scores —
+required to keep the dry-run memory analysis inside HBM.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed import sharding as sh
+
+Params = dict[str, Any]
+
+
+# --------------------------------------------------------------------- norms
+def rms_norm(x, gamma, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma
+
+
+# ---------------------------------------------------------------------- rope
+def rope_freqs(d_head: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, dh); positions: (..., S)."""
+    d_head = x.shape[-1]
+    freqs = rope_freqs(d_head, theta)                      # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    cos = jnp.cos(angles)[..., None, :]                    # (..., S, 1, dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- attention
+#
+# GQA is computed in *grouped* form everywhere: q is viewed as
+# (B, Sq, KV, G, dh) with H = KV·G and contracted directly against the
+# (B, Sk, KV, dh) keys/values. The repeated-KV tensor (B, S, H, dh) is never
+# materialized — at deepseek decode_32k that repeat was 4.3 GB per layer per
+# device and forced GSPMD to all-gather the sequence-sharded cache.
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: int = 0,
+                      chunk: int = 1024, q_offset: int = 0,
+                      unroll: bool = False):
+    """Flash-style attention: scan over KV chunks with running (m, l, acc).
+
+    q: (B, Sq, H, dh); k, v: (B, Sk, KV, dh) (grouped GQA — no repeat).
+    ``q_offset`` is the absolute position of q[0] relative to k[0]
+    (prefill: 0; decode: cache length). ``window > 0`` restricts to a
+    causal local window (recurrentgemma). Never materializes (Sq, Sk);
+    peak extra memory is (B, H, Sq, chunk) scores per step.
+    """
+    b, sq, h, dh = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, dh)
+    scale = 1.0 / (dh ** 0.5)
+    ck = min(chunk, sk)
+    assert sk % ck == 0, (sk, ck)
+    n_chunks = sk // ck
+
+    q_pos = (q_offset + jnp.arange(sq))[None, :]           # (1, Sq)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        k_c, v_c, k_start = inputs                         # (B, ck, KV, dh)
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qg, k_c).astype(jnp.float32) * scale
+        k_pos = (k_start + jnp.arange(ck))
+        mask = jnp.ones(s.shape[-2:], dtype=bool)[None, None, None]
+        qp = q_pos[:, None, None, :, None]
+        kp = k_pos[None, None, None, None, :]
+        if causal:
+            mask = mask & (qp >= kp)
+        if window > 0:
+            mask = mask & ((qp - kp) < window)
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqc,bckd->bkgqd", p.astype(v_c.dtype), v_c).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    init = (
+        jnp.full((b, kv, g, sq), -jnp.inf, jnp.float32),
+        jnp.zeros((b, kv, g, sq), jnp.float32),
+        jnp.zeros((b, kv, g, sq, dh), jnp.float32),
+    )
+    ks = k.reshape(b, n_chunks, ck, kv, dh).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, n_chunks, ck, kv, dh).transpose(1, 0, 2, 3, 4)
+    starts = jnp.arange(n_chunks) * ck
+    (m, l, acc), _ = jax.lax.scan(body, init, (ks, vs, starts),
+                                  unroll=True if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]           # (B,KV,G,Sq,dh)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dh).astype(q.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionBlock:
+    """GQA attention with RoPE, optional qk-norm and local window."""
+
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    rope_theta: float
+    causal: bool = True
+    window: int = 0
+    qk_norm: bool = False
+    chunk: int = 1024
+    norm_eps: float = 1e-6
+    unroll: bool = False
+
+    def init(self, key, d_model, dtype):
+        ks = jax.random.split(key, 4)
+        h, kv, dh = self.n_heads, self.n_kv_heads, self.d_head
+        std = d_model ** -0.5
+        p = {
+            "wq": (jax.random.normal(ks[0], (d_model, h, dh)) * std).astype(dtype),
+            "wk": (jax.random.normal(ks[1], (d_model, kv, dh)) * std).astype(dtype),
+            "wv": (jax.random.normal(ks[2], (d_model, kv, dh)) * std).astype(dtype),
+            "wo": (jax.random.normal(ks[3], (h, dh, d_model)) * std * (2 * h) ** -0.5).astype(dtype),
+        }
+        if self.qk_norm:
+            p["q_norm"] = jnp.ones((dh,), dtype)
+            p["k_norm"] = jnp.ones((dh,), dtype)
+        return p
+
+    def _qkv(self, p, x, positions):
+        q = sh.constrain(jnp.einsum("bsd,dhk->bshk", x, p["wq"]), "heads")
+        k = sh.constrain(jnp.einsum("bsd,dhk->bshk", x, p["wk"]), "kv_heads")
+        v = sh.constrain(jnp.einsum("bsd,dhk->bshk", x, p["wv"]), "kv_heads")
+        if self.qk_norm:
+            q = rms_norm(q, p["q_norm"], self.norm_eps)
+            k = rms_norm(k, p["k_norm"], self.norm_eps)
+        q = apply_rope(q, positions, self.rope_theta)
+        k = apply_rope(k, positions, self.rope_theta)
+        return q, k, v
+
+    def forward(self, p, x, positions):
+        """x: (B, S, D) → (B, S, D); full-sequence (train / prefill)."""
+        q, k, v = self._qkv(p, x, positions)
+        o = chunked_attention(q, k, v, causal=self.causal, window=self.window,
+                              chunk=self.chunk, unroll=self.unroll)
+        out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+        return sh.constrain(out, "residual")
+
+    # ------------------------------------------------------------- decode
+    def init_cache(self, batch, max_len, dtype):
+        # Layout (B, KV, S, dh): the decode einsums contract directly over
+        # the trailing (S, dh) — no per-layer transposes of the multi-GB
+        # cache (the (B, S, KV, dh) layout cost 256 MiB copies per layer on
+        # deepseek decode_32k).
+        kv, dh = self.n_kv_heads, self.d_head
+        length = min(max_len, self.window) if self.window else max_len
+        return {
+            "k": jnp.zeros((batch, kv, length, dh), dtype),
+            "v": jnp.zeros((batch, kv, length, dh), dtype),
+        }
+
+    def decode(self, p, x, cache, pos):
+        """x: (B, 1, D); pos: scalar absolute position. Returns (out, cache)."""
+        q, k, v = self._qkv(p, x, pos[None, None] if pos.ndim == 0 else pos)
+        length = cache["k"].shape[2]
+        slot = (pos % length) if self.window else pos
+        k_new = k.transpose(0, 2, 1, 3)                    # (B, KV, 1, dh)
+        v_new = v.transpose(0, 2, 1, 3)
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=2)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=2)
+        logical = sh.cache_logical(self.n_kv_heads)
+        ck = sh.constrain(ck, logical)
+        cv = sh.constrain(cv, logical)
+        kv, g = self.n_kv_heads, self.n_heads // self.n_kv_heads
+        b = q.shape[0]
+        qg = q.reshape(b, 1, kv, g, self.d_head)[:, 0]     # (B, KV, G, dh)
+        scale = 1.0 / (self.d_head ** 0.5)
+        # Grouped scores against the (possibly sequence-sharded) cache —
+        # clean batched matmul over (S, dh); softmax/combine reductions over
+        # the sharded S are partial-reduce + tiny all-reduce under GSPMD.
+        s = jnp.einsum("bkgd,bksd->bkgs", qg, ck).astype(jnp.float32) * scale
+        k_idx = jnp.arange(length)[None, None, None, :]
+        if self.window:
+            # Ring buffer: entry j holds absolute position
+            # a_j = pos - ((slot - j) mod L); valid iff a_j >= 0 (window == L
+            # keeps every live entry in range automatically).
+            a_j = pos - ((slot - k_idx) % length)
+            s = jnp.where(a_j >= 0, s, -1e30)
+        else:
+            s = jnp.where(k_idx <= pos, s, -1e30)
+        w = jax.nn.softmax(s, axis=-1).astype(cv.dtype)
+        o = jnp.einsum("bkgs,bksd->bkgd", w, cv)
+        o = o.reshape(b, 1, self.n_heads, self.d_head)
+        out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+        return out, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------- MLPs
+@dataclasses.dataclass(frozen=True)
+class SwiGLU:
+    d_ff: int
+
+    def init(self, key, d_model, dtype):
+        ks = jax.random.split(key, 3)
+        std_in = d_model ** -0.5
+        std_out = self.d_ff ** -0.5
+        return {
+            "wg": (jax.random.normal(ks[0], (d_model, self.d_ff)) * std_in).astype(dtype),
+            "wu": (jax.random.normal(ks[1], (d_model, self.d_ff)) * std_in).astype(dtype),
+            "wd": (jax.random.normal(ks[2], (self.d_ff, d_model)) * std_out).astype(dtype),
+        }
+
+    def forward(self, p, x):
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])
+        h = sh.constrain(h, "ffn")
+        return sh.constrain(h @ p["wd"], "residual")
+
+    decode = None  # stateless
+
+
+@dataclasses.dataclass(frozen=True)
+class GeluMLP:
+    d_ff: int
+
+    def init(self, key, d_model, dtype):
+        ks = jax.random.split(key, 2)
+        return {
+            "w1": (jax.random.normal(ks[0], (d_model, self.d_ff)) * d_model ** -0.5).astype(dtype),
+            "w2": (jax.random.normal(ks[1], (self.d_ff, d_model)) * self.d_ff ** -0.5).astype(dtype),
+        }
+
+    def forward(self, p, x):
+        h = jax.nn.gelu(sh.constrain(x @ p["w1"], "ffn"))
+        return sh.constrain(h @ p["w2"], "residual")
+
+    decode = None
+
+
+@dataclasses.dataclass(frozen=True)
+class MoE:
+    """Top-k routed experts with capacity-based einsum dispatch (EP over
+    the data axis, expert-hidden over model — DESIGN.md §5). Optionally a
+    parallel dense residual MLP (arctic)."""
+
+    d_ff: int
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    dense_residual: bool = False
+
+    def init(self, key, d_model, dtype):
+        ks = jax.random.split(key, 5)
+        e, f = self.n_experts, self.d_ff
+        std_in = d_model ** -0.5
+        p = {
+            "router": (jax.random.normal(ks[0], (d_model, e)) * std_in).astype(jnp.float32),
+            "wg": (jax.random.normal(ks[1], (e, d_model, f)) * std_in).astype(dtype),
+            "wu": (jax.random.normal(ks[2], (e, d_model, f)) * std_in).astype(dtype),
+            "wd": (jax.random.normal(ks[3], (e, f, d_model)) * f ** -0.5).astype(dtype),
+        }
+        if self.dense_residual:
+            p["dense"] = SwiGLU(self.d_ff).init(ks[4], d_model, dtype)
+        return p
+
+    def _capacity(self, n_tokens: int) -> int:
+        c = int(self.capacity_factor * self.top_k * n_tokens / self.n_experts)
+        return max(c, self.top_k)
+
+    def forward(self, p, x):
+        """Grouped (per-batch-row) dispatch, GShard-style.
+
+        Routing positions come from a cumsum *within each row* — fully local
+        under batch sharding (a global cumsum over all tokens serializes
+        across every data shard; that was the dominant collective cost of
+        the first implementation — EXPERIMENTS.md §Perf, arctic train_4k).
+        Capacity is per row (cf·k·S/E). Expert compute is E-sharded over
+        'data' (EP): GSPMD turns the B-sharded → E-sharded boundary into the
+        canonical token all-to-all, ~B·S·k·cf·D bytes per layer.
+        No (T, E, C) one-hot tensor is ever built (10^13 elements at arctic
+        train scale)."""
+        b, s, d = x.shape
+        e, k = self.n_experts, self.top_k
+        cap = max(int(self.capacity_factor * k * s / e), k)      # per row
+        logits = x.astype(jnp.float32) @ p["router"]             # (B, S, E)
+        gates = jax.nn.softmax(logits, axis=-1)
+        top_g, top_e = jax.lax.top_k(gates, k)                   # (B, S, k)
+        top_g = top_g / jnp.maximum(top_g.sum(-1, keepdims=True), 1e-9)
+        flat_e = top_e.reshape(b, s * k)                         # (B, S·k)
+        onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)      # (B, S·k, E)
+        pos = ((jnp.cumsum(onehot, axis=1) - 1) * onehot).sum(-1)  # (B, S·k)
+        keep = pos < cap
+        dest = jnp.where(keep, flat_e * cap + pos, e * cap)      # overflow row
+        tok = jnp.arange(s * k) // k
+        x_rows = x[:, tok]                                       # (B, S·k, D)
+        b_idx = jnp.arange(b)[:, None]
+        xe = jnp.zeros((b, e * cap + 1, d), x.dtype).at[b_idx, dest].add(x_rows)
+        xe = sh.constrain(xe[:, : e * cap].reshape(b, e, cap, d), "moe_tokens")
+        # E-sharded expert compute — the constraint boundary below is the
+        # all-to-all (tokens travel to their experts' data shards).
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, p["wg"]))
+        h = h * jnp.einsum("becd,edf->becf", xe, p["wu"])
+        h = sh.constrain(h, "moe_hidden")
+        ye = jnp.einsum("becf,efd->becd", h, p["wd"])
+        ye = sh.constrain(ye, "moe_tokens")                      # a2a back
+        ye_flat = jnp.concatenate(
+            [ye.reshape(b, e * cap, d),
+             jnp.zeros((b, 1, d), ye.dtype)], axis=1)
+        y = ye_flat[b_idx, dest] * top_g.reshape(b, s * k, 1).astype(ye.dtype)
+        y = y.reshape(b, s, k, d).sum(2)
+        if self.dense_residual:
+            y = y + SwiGLU(self.d_ff).forward(p["dense"], x)
+        return sh.constrain(y, "residual")
+
+    decode = None

@@ -1,0 +1,279 @@
+"""Recurrent sequence-mix blocks: RG-LRU (Griffin/recurrentgemma) and RWKV-6.
+
+Both are sub-quadratic and state-based → they serve the ``long_500k`` cell
+with O(1)-in-seq decode state.
+
+RG-LRU trains via ``jax.lax.associative_scan`` (O(T log T) work, parallel
+depth log T — the TPU-idiomatic mapping of a linear recurrence).
+
+RWKV-6 trains in **chunked linear-attention form** (GLA-style): the
+recurrence S_t = diag(w_t) S_{t-1} + k_t v_t^T is advanced chunk-by-chunk
+with intra-chunk contributions computed as masked matmuls on the MXU.
+Per-channel decays are kept in log space; with ``logw`` clamped to
+[-CLAMP, 0) and chunk length L, every factored exponent is bounded by
+L·CLAMP < 88 so all intermediates stay inside f32 range (the TPU-side
+equivalent of fla's secondary-chunking trick — recorded in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed import sharding as sh
+
+RWKV_CHUNK = 32
+LOGW_CLAMP = 2.5  # |logw| <= 2.5 → exponents <= 32*2.5 = 80 < log(f32max)
+
+
+# ------------------------------------------------------------------- RG-LRU
+@dataclasses.dataclass(frozen=True)
+class RGLRUBlock:
+    """Griffin recurrent block: conv4 → RG-LRU → GeLU-gated output."""
+
+    d_rnn: int
+    conv_width: int = 4
+    c: float = 8.0
+
+    def init(self, key, d_model, dtype):
+        ks = jax.random.split(key, 6)
+        r = self.d_rnn
+        std = d_model ** -0.5
+        stdr = r ** -0.5
+        return {
+            "wx": (jax.random.normal(ks[0], (d_model, r)) * std).astype(dtype),
+            "wgate": (jax.random.normal(ks[1], (d_model, r)) * std).astype(dtype),
+            "conv": (jax.random.normal(ks[2], (self.conv_width, r)) * 0.1).astype(dtype),
+            "wa": (jax.random.normal(ks[3], (r, r)) * stdr).astype(dtype),
+            "wi": (jax.random.normal(ks[4], (r, r)) * stdr).astype(dtype),
+            # Λ init so a^c ≈ 0.9..0.99 decay (Griffin §2.4).
+            "lam": jnp.linspace(0.5, 4.0, r).astype(jnp.float32),
+            "wo": (jax.random.normal(ks[5], (r, d_model)) * stdr).astype(dtype),
+        }
+
+    def _gates(self, p, u):
+        """u: (B, S, R) post-conv → (log_a, gated input) in f32."""
+        r_g = jax.nn.sigmoid(u @ p["wa"]).astype(jnp.float32)
+        i_g = jax.nn.sigmoid(u @ p["wi"]).astype(jnp.float32)
+        log_a = -self.c * jax.nn.softplus(p["lam"]) * r_g      # (B,S,R) < 0
+        beta = jnp.sqrt(1.0 - jnp.exp(2.0 * log_a) + 1e-9)
+        b = beta * (i_g * u.astype(jnp.float32))
+        return log_a, b
+
+    def _conv(self, p, u, carry=None):
+        """Causal depthwise conv width-4. carry: (B, w-1, R) previous inputs."""
+        w = self.conv_width
+        if carry is None:
+            carry = jnp.zeros((u.shape[0], w - 1, u.shape[-1]), u.dtype)
+        ext = jnp.concatenate([carry, u], axis=1)
+        out = sum(ext[:, i:i + u.shape[1]] * p["conv"][i] for i in range(w))
+        return out, ext[:, -(w - 1):]
+
+    def forward(self, p, x, state=None):
+        """x: (B,S,D) → (B,S,D); optionally return final state for decode."""
+        u = sh.constrain(x @ p["wx"], "rnn_act")
+        g = jax.nn.gelu(x @ p["wgate"])
+        h0 = None if state is None else state["h"]
+        conv_carry = None if state is None else state["conv"]
+        u, conv_out = self._conv(p, u, conv_carry)
+        log_a, b = self._gates(p, u)
+        if h0 is not None:
+            # Fold the incoming state into the first step: b_0 += a_0 * h0.
+            b = b.at[:, 0].add(jnp.exp(log_a[:, 0]) * h0)
+
+        def combine(left, right):
+            la_l, b_l = left
+            la_r, b_r = right
+            return la_l + la_r, b_l * jnp.exp(la_r) + b_r
+
+        _, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+        h = sh.constrain(h.astype(x.dtype), "rnn_act")
+        out = sh.constrain((g * h) @ p["wo"], "residual")
+        new_state = {"h": h[:, -1].astype(jnp.float32), "conv": conv_out}
+        return out, new_state
+
+    # -------------------------------------------------------------- decode
+    def init_state(self, batch, dtype):
+        return {
+            "h": jnp.zeros((batch, self.d_rnn), jnp.float32),
+            "conv": jnp.zeros((batch, self.conv_width - 1, self.d_rnn), dtype),
+        }
+
+    def decode(self, p, x, state):
+        """x: (B,1,D) single step."""
+        u = x @ p["wx"]
+        g = jax.nn.gelu(x @ p["wgate"])
+        u, conv_carry = self._conv(p, u, state["conv"])
+        log_a, b = self._gates(p, u)
+        h = jnp.exp(log_a[:, 0]) * state["h"] + b[:, 0]
+        out = (g[:, 0] * h.astype(x.dtype)) @ p["wo"]
+        return out[:, None], {"h": h, "conv": conv_carry}
+
+
+# -------------------------------------------------------------------- RWKV6
+@dataclasses.dataclass(frozen=True)
+class RWKV6TimeMix:
+    """Finch time-mix: data-dependent per-channel decay, chunked training."""
+
+    n_heads: int
+    d_head: int
+    lora_rank: int = 64
+    unroll: bool = False
+
+    def init(self, key, d_model, dtype):
+        ks = jax.random.split(key, 8)
+        d = d_model
+        h, dh = self.n_heads, self.d_head
+        assert h * dh == d
+        std = d ** -0.5
+        return {
+            "mu": (jax.random.uniform(ks[0], (5, d))).astype(dtype),  # r,k,v,w,g
+            "wr": (jax.random.normal(ks[1], (d, d)) * std).astype(dtype),
+            "wk": (jax.random.normal(ks[2], (d, d)) * std).astype(dtype),
+            "wv": (jax.random.normal(ks[3], (d, d)) * std).astype(dtype),
+            "wg": (jax.random.normal(ks[4], (d, d)) * std).astype(dtype),
+            "w_lora_a": (jax.random.normal(ks[5], (d, self.lora_rank)) * std).astype(dtype),
+            "w_lora_b": (jax.random.normal(ks[6], (self.lora_rank, d))
+                         * self.lora_rank ** -0.5).astype(dtype),
+            "lam": jnp.full((d,), -1.5, jnp.float32),
+            "u": (jax.random.normal(ks[7], (h, dh)) * 0.1).astype(jnp.float32),
+            "ln_w": jnp.ones((d,), dtype),
+            "wo": (jax.random.normal(ks[0], (d, d)) * std).astype(dtype),
+        }
+
+    def _proj(self, p, x, x_prev):
+        """Token-shift lerp + projections. x, x_prev: (B,S,D)."""
+        mu = p["mu"]
+        mix = lambda i: x * mu[i] + x_prev * (1 - mu[i])
+        b, s, d = x.shape
+        h, dh = self.n_heads, self.d_head
+        r = (mix(0) @ p["wr"]).reshape(b, s, h, dh)
+        k = (mix(1) @ p["wk"]).reshape(b, s, h, dh)
+        v = (mix(2) @ p["wv"]).reshape(b, s, h, dh)
+        lora = jnp.tanh(mix(3) @ p["w_lora_a"]) @ p["w_lora_b"]
+        logw = -jnp.exp(p["lam"] + lora.astype(jnp.float32))
+        logw = jnp.clip(logw, -LOGW_CLAMP, -1e-6).reshape(b, s, h, dh)
+        g = jax.nn.silu(mix(4) @ p["wg"])
+        return r, k, v, logw, g
+
+    def _norm_out(self, p, y, g, b, s):
+        d = self.n_heads * self.d_head
+        y = y.reshape(b, s, self.n_heads, self.d_head)
+        # Per-head group norm.
+        mean = y.mean(-1, keepdims=True)
+        var = y.var(-1, keepdims=True)
+        y = ((y - mean) * jax.lax.rsqrt(var + 1e-5)).reshape(b, s, d)
+        y = y * p["ln_w"]
+        return (y.astype(g.dtype) * g) @ p["wo"]
+
+    def forward(self, p, x, state=None):
+        """x: (B,S,D), S % RWKV_CHUNK == 0. Returns (out, new_state)."""
+        b, s, d = x.shape
+        h, dh = self.n_heads, self.d_head
+        L = min(RWKV_CHUNK, s)
+        assert s % L == 0
+        shift = state["shift_tm"] if state is not None else jnp.zeros((b, d), x.dtype)
+        x_prev = jnp.concatenate([shift[:, None], x[:, :-1]], axis=1)
+        r, k, v, logw, g = self._proj(p, x, x_prev)
+        r = sh.constrain(r, "rwkv_act")
+        k = sh.constrain(k, "rwkv_act")
+        v = sh.constrain(v, "rwkv_act")
+        n_chunks = s // L
+        # (C, B, H, L, dh) chunk-major for the scan.
+        resh = lambda t: t.reshape(b, n_chunks, L, h, dh).transpose(1, 0, 3, 2, 4)
+        rc, kc, vc, wc = resh(r), resh(k), resh(v), resh(logw)
+        S0 = (state["wkv"] if state is not None
+              else jnp.zeros((b, h, dh, dh), jnp.float32))
+        u = p["u"]  # (H, dh)
+        mask = jnp.tril(jnp.ones((L, L), bool), k=-1)
+
+        def chunk_step(S, inp):
+            rc_, kc_, vc_, wc_ = inp           # (B,H,L,dh); wc_ f32
+            c_inc = jnp.cumsum(wc_, axis=2)    # inclusive Σ logw
+            c_exc = c_inc - wc_                # exclusive
+            cL = c_inc[:, :, -1:]              # (B,H,1,dh)
+            rf = rc_.astype(jnp.float32)
+            kf = kc_.astype(jnp.float32)
+            vf = vc_.astype(jnp.float32)
+            q_t = rf * jnp.exp(c_exc)                    # exponents <= 0
+            k_t = kf * jnp.exp(-c_inc)                   # exponents in [0, L*CLAMP]
+            A = jnp.einsum("bhid,bhjd->bhij", q_t, k_t)
+            A = jnp.where(mask, A, 0.0)
+            # Diagonal bonus: A_ii = Σ_d r_id · u_d · k_id  (RWKV "u" term).
+            diag = (rf * u[None, :, None, :] * kf).sum(-1)     # (B,H,L)
+            A = A + diag[..., None] * jnp.eye(L, dtype=A.dtype)
+            y = jnp.einsum("bhij,bhjd->bhid", A, vf)
+            y = y + jnp.einsum("bhid,bhde->bhie", q_t, S)
+            k_hat = kf * jnp.exp(cL - c_inc)             # exponents <= 0
+            S_new = jnp.exp(cL.squeeze(2))[..., None] * S + jnp.einsum(
+                "bhjd,bhje->bhde", k_hat, vf)
+            return S_new, y
+
+        S_final, ys = jax.lax.scan(chunk_step, S0, (rc, kc, vc, wc),
+                                   unroll=True if self.unroll else 1)
+        y = ys.transpose(1, 0, 3, 2, 4).reshape(b, s, h * dh)
+        out = self._norm_out(p, y, g, b, s)
+        new_state = {"wkv": S_final, "shift_tm": x[:, -1]}
+        return sh.constrain(out, "residual"), new_state
+
+    # -------------------------------------------------------------- decode
+    def init_state(self, batch, d_model, dtype):
+        return {
+            "wkv": jnp.zeros((batch, self.n_heads, self.d_head, self.d_head),
+                             jnp.float32),
+            "shift_tm": jnp.zeros((batch, d_model), dtype),
+        }
+
+    def decode(self, p, x, state):
+        b, _, d = x.shape
+        h, dh = self.n_heads, self.d_head
+        x_prev = state["shift_tm"][:, None]
+        r, k, v, logw, g = self._proj(p, x, x_prev)
+        rf = r[:, 0].astype(jnp.float32)        # (B,H,dh)
+        kf = k[:, 0].astype(jnp.float32)
+        vf = v[:, 0].astype(jnp.float32)
+        w = jnp.exp(logw[:, 0])
+        S = state["wkv"]
+        u = p["u"]
+        # y = r · (S + diag(u) k v^T); S' = diag(w) S + k v^T
+        y = jnp.einsum("bhd,bhde->bhe", rf, S)
+        y = y + jnp.einsum("bhd,bhd,bhe->bhe", rf, u[None] * kf, vf)
+        S_new = w[..., None] * S + jnp.einsum("bhd,bhe->bhde", kf, vf)
+        out = self._norm_out(p, y.reshape(b, 1, h * dh), g, b, 1)
+        return out, {"wkv": S_new, "shift_tm": x[:, 0]}
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6ChannelMix:
+    """Finch channel-mix: token-shift + squared-ReLU MLP with receptance."""
+
+    d_ff: int
+
+    def init(self, key, d_model, dtype):
+        ks = jax.random.split(key, 3)
+        return {
+            "mu": jax.random.uniform(ks[0], (2, d_model)).astype(dtype),  # k, r
+            "wk": (jax.random.normal(ks[0], (d_model, self.d_ff)) * d_model ** -0.5).astype(dtype),
+            "wv": (jax.random.normal(ks[1], (self.d_ff, d_model)) * self.d_ff ** -0.5).astype(dtype),
+            "wr": (jax.random.normal(ks[2], (d_model, d_model)) * d_model ** -0.5).astype(dtype),
+        }
+
+    def forward(self, p, x, state=None):
+        b, s, d = x.shape
+        shift = state["shift_cm"] if state is not None else jnp.zeros((b, d), x.dtype)
+        x_prev = jnp.concatenate([shift[:, None], x[:, :-1]], axis=1)
+        mu = p["mu"]
+        xk = x * mu[0] + x_prev * (1 - mu[0])
+        xr = x * mu[1] + x_prev * (1 - mu[1])
+        k = jnp.square(jax.nn.relu(sh.constrain(xk @ p["wk"], "ffn")))
+        out = jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"])
+        return sh.constrain(out, "residual"), {"shift_cm": x[:, -1]}
+
+    def init_state(self, batch, d_model, dtype):
+        return {"shift_cm": jnp.zeros((batch, d_model), dtype)}
+
+    def decode(self, p, x, state):
+        out, new_state = self.forward(p, x, state)
+        return out, new_state

@@ -1,0 +1,307 @@
+"""The composable model stack: init, train forward, prefill, decode.
+
+Layers are organised as repeated *periods* (config.period), scanned with
+stacked parameters (`lax.scan` over the period axis) and per-period remat —
+the standard JAX recipe that keeps HLO size O(1) in depth for 95-layer
+models and bounds saved activations to one residual per period.
+
+Block = sequence-mix (attn / local_attn / rglru / rwkv6) + channel-mix
+(swiglu / gelu / moe / moe_dense / rwkv_cm), each pre-RMSNormed with a
+residual add (pre-LN).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed import sharding as sh
+from .config import ModelConfig
+from .layers import AttentionBlock, GeluMLP, MoE, SwiGLU, rms_norm
+from .recurrent import RGLRUBlock, RWKV6ChannelMix, RWKV6TimeMix
+
+Params = dict[str, Any]
+
+
+# ------------------------------------------------------------- block builders
+def _seq_block(cfg: ModelConfig, kind: str):
+    if kind in ("attn", "local_attn"):
+        return AttentionBlock(
+            n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads,
+            d_head=cfg.d_head,
+            rope_theta=cfg.rope_theta,
+            causal=cfg.causal,
+            window=cfg.window if kind == "local_attn" else 0,
+            qk_norm=cfg.qk_norm,
+            chunk=cfg.attn_chunk,
+            norm_eps=cfg.norm_eps,
+            unroll=cfg.scan_unroll,
+        )
+    if kind == "rglru":
+        return RGLRUBlock(d_rnn=cfg.d_rnn)
+    if kind == "rwkv6":
+        return RWKV6TimeMix(n_heads=cfg.d_model // cfg.rwkv_head_dim,
+                            d_head=cfg.rwkv_head_dim,
+                            unroll=cfg.scan_unroll)
+    raise ValueError(kind)
+
+
+def _mix_block(cfg: ModelConfig, kind: str):
+    if kind == "swiglu":
+        return SwiGLU(cfg.d_ff)
+    if kind == "gelu":
+        return GeluMLP(cfg.d_ff)
+    if kind in ("moe", "moe_dense"):
+        return MoE(cfg.d_ff, cfg.n_experts, cfg.top_k, cfg.capacity_factor,
+                   dense_residual=(kind == "moe_dense"))
+    if kind == "rwkv_cm":
+        return RWKV6ChannelMix(cfg.d_ff)
+    raise ValueError(kind)
+
+
+def _blocks_for_period(cfg: ModelConfig):
+    return [( _seq_block(cfg, b), _mix_block(cfg, m))
+            for b, m in zip(cfg.period, cfg.mix)]
+
+
+def _blocks_for_tail(cfg: ModelConfig):
+    return [( _seq_block(cfg, b), _mix_block(cfg, m))
+            for b, m in zip(cfg.tail, cfg.tail_mix)]
+
+
+# ----------------------------------------------------------------------- init
+def _init_layer(key, cfg, seq_blk, mix_blk, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "seq": seq_blk.init(k1, cfg.d_model, dtype),
+        "norm2": jnp.ones((cfg.d_model,), dtype),
+        "mix": mix_blk.init(k2, cfg.d_model, dtype),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 4)
+    period_blocks = _blocks_for_period(cfg)
+    tail_blocks = _blocks_for_tail(cfg)
+
+    def init_period(k):
+        ks = jax.random.split(k, len(period_blocks))
+        return {f"slot{i}": _init_layer(ks[i], cfg, sb, mb, dtype)
+                for i, (sb, mb) in enumerate(period_blocks)}
+
+    period_keys = jax.random.split(keys[0], cfg.n_periods)
+    params: Params = {
+        "embed": (jax.random.normal(keys[1], (cfg.vocab_size, cfg.d_model))
+                  * cfg.d_model ** -0.5).astype(dtype),
+        "periods": jax.vmap(init_period)(period_keys),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if tail_blocks:
+        tks = jax.random.split(keys[2], len(tail_blocks))
+        params["tail"] = [
+            _init_layer(tks[i], cfg, sb, mb, dtype)
+            for i, (sb, mb) in enumerate(tail_blocks)
+        ]
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(keys[3], (cfg.d_model, cfg.vocab_size))
+            * cfg.d_model ** -0.5).astype(dtype)
+    return params
+
+
+def param_specs(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree without allocating (dry-run path)."""
+    return jax.eval_shape(lambda k: init_params(cfg, k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+# --------------------------------------------------------- forward (sequence)
+def _apply_layer(cfg, seq_blk, mix_blk, p, x, positions, state=None):
+    """Pre-LN residual block. Returns (x, new_state)."""
+    # Pin the norm OUTPUT sharding (bf16): without this GSPMD may place the
+    # layer-boundary all-gather on the norm's f32 intermediate — 2× the
+    # collective bytes (measured on internlm2 train_4k, EXPERIMENTS.md §Perf).
+    h = sh.constrain(rms_norm(x, p["norm1"], cfg.norm_eps), "residual")
+    if isinstance(seq_blk, AttentionBlock):
+        a = seq_blk.forward(p["seq"], h, positions)
+        new_seq_state = None
+    else:
+        a, new_seq_state = seq_blk.forward(p["seq"], h, state)
+    x = x + a
+    h = sh.constrain(rms_norm(x, p["norm2"], cfg.norm_eps), "residual")
+    if isinstance(mix_blk, RWKV6ChannelMix):
+        m, new_cm_state = mix_blk.forward(p["mix"], h,
+                                          state if state else None)
+        if new_seq_state is None:
+            new_seq_state = {}
+        if new_cm_state:
+            new_seq_state.update(new_cm_state)
+    else:
+        m = mix_blk.forward(p["mix"], h)
+    x = sh.constrain(x + m, "residual")
+    return x, new_seq_state
+
+
+def _embed_in(cfg: ModelConfig, params, batch):
+    # Modality-stub frontends (audio/vlm) feed precomputed embeddings; VLM
+    # decode still feeds text tokens — dispatch on the batch key.
+    if "embeds" in batch:
+        x = batch["embeds"].astype(jnp.dtype(cfg.compute_dtype))
+        return sh.constrain(x, "embeds_in")
+    tokens = sh.constrain(batch["tokens"], "tokens")
+    x = jnp.take(params["embed"], tokens, axis=0)
+    return sh.constrain(x.astype(jnp.dtype(cfg.compute_dtype)), "residual")
+
+
+def forward(params: Params, batch: dict, cfg: ModelConfig):
+    """Full-sequence forward → logits (B, S, V). Train/prefill path."""
+    x = _embed_in(cfg, params, batch)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    period_blocks = _blocks_for_period(cfg)
+
+    def period_fn(x, p_period):
+        for i, (sb, mb) in enumerate(period_blocks):
+            x, _ = _apply_layer(cfg, sb, mb, p_period[f"slot{i}"], x, positions)
+        return x, None
+
+    if cfg.remat:
+        period_fn = jax.checkpoint(period_fn)
+    if cfg.unroll_periods:
+        for i in range(cfg.n_periods):
+            x, _ = period_fn(x, jax.tree.map(lambda t: t[i], params["periods"]))
+    else:
+        x, _ = jax.lax.scan(period_fn, x, params["periods"])
+    for i, (sb, mb) in enumerate(_blocks_for_tail(cfg)):
+        x, _ = _apply_layer(cfg, sb, mb, params["tail"][i], x, positions)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return sh.constrain(logits, "logits")
+
+
+def loss_fn(params: Params, batch: dict, cfg: ModelConfig):
+    """Mean next-token cross entropy (labels already shifted by the data
+    pipeline). Returns (loss, metrics)."""
+    logits = forward(params, batch, cfg).astype(jnp.float32)
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    # Sharding-friendly CE: all reductions over the (model-sharded) vocab
+    # dim are partial-reduce + tiny all-reduce. take_along_axis would force
+    # GSPMD to all-gather the full (B, S, V) logits — never do that.
+    m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    onehot = labels[..., None] == jnp.arange(logits.shape[-1])[None, None, :]
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = lse - gold
+    if mask is None:
+        loss = nll.mean()
+        denom = nll.size
+    else:
+        loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+        denom = mask.sum()
+    return loss, {"loss": loss, "tokens": denom}
+
+
+# -------------------------------------------------------------------- decode
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Decode cache pytree, stacked over periods like the params."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    period_blocks = _blocks_for_period(cfg)
+
+    def one_layer(sb, mb):
+        c = {}
+        if isinstance(sb, AttentionBlock):
+            c.update(sb.init_cache(batch, max_len, dtype))
+        elif isinstance(sb, RGLRUBlock):
+            c.update(sb.init_state(batch, dtype))
+        elif isinstance(sb, RWKV6TimeMix):
+            c.update(sb.init_state(batch, cfg.d_model, dtype))
+        if isinstance(mb, RWKV6ChannelMix):
+            c.update(mb.init_state(batch, cfg.d_model, dtype))
+        return c
+
+    def stack(tree):
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_periods,) + x.shape), tree)
+
+    cache = {
+        "periods": {f"slot{i}": stack(one_layer(sb, mb))
+                    for i, (sb, mb) in enumerate(period_blocks)},
+    }
+    tail_blocks = _blocks_for_tail(cfg)
+    if tail_blocks:
+        cache["tail"] = [one_layer(sb, mb) for sb, mb in tail_blocks]
+    return cache
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def _decode_layer(cfg, seq_blk, mix_blk, p, x, cache, pos):
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if isinstance(seq_blk, AttentionBlock):
+        a, new_cache = seq_blk.decode(p["seq"], h, cache, pos)
+    else:
+        a, new_cache = seq_blk.decode(p["seq"], h,
+                                      {k: cache[k] for k in cache
+                                       if not k.startswith("shift_cm")})
+    x = x + a
+    h = rms_norm(x, p["norm2"], cfg.norm_eps)
+    if isinstance(mix_blk, RWKV6ChannelMix):
+        m, cm_cache = mix_blk.decode(p["mix"], h,
+                                     {"shift_cm": cache["shift_cm"]})
+        new_cache = {**new_cache, **cm_cache}
+    else:
+        m = mix_blk.forward(p["mix"], h)
+    return x + m, new_cache
+
+
+def decode_step(params: Params, cache, batch: dict, pos, cfg: ModelConfig):
+    """One token for the whole batch. batch: {"tokens": (B,1)} (or embeds).
+
+    ``pos`` is the scalar absolute position (cache fill level). Returns
+    (logits (B, 1, V), new_cache).
+    """
+    x = _embed_in(cfg, params, batch)
+    period_blocks = _blocks_for_period(cfg)
+
+    def period_fn(x, inp):
+        p_period, c_period = inp
+        new_c = {}
+        for i, (sb, mb) in enumerate(period_blocks):
+            x, nc = _decode_layer(cfg, sb, mb, p_period[f"slot{i}"], x,
+                                  c_period[f"slot{i}"], pos)
+            new_c[f"slot{i}"] = nc
+        return x, new_c
+
+    if cfg.unroll_periods:
+        new_cs = []
+        for i in range(cfg.n_periods):
+            x, nc = period_fn(x, jax.tree.map(lambda t: t[i],
+                                              (params["periods"],
+                                               cache["periods"])))
+            new_cs.append(nc)
+        new_period_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *new_cs)
+    else:
+        x, new_period_cache = jax.lax.scan(
+            period_fn, x, (params["periods"], cache["periods"]))
+    new_cache = {"periods": new_period_cache}
+    if "tail" in cache:
+        new_tail = []
+        for i, (sb, mb) in enumerate(_blocks_for_tail(cfg)):
+            x, nc = _decode_layer(cfg, sb, mb, params["tail"][i], x,
+                                  cache["tail"][i], pos)
+            new_tail.append(nc)
+        new_cache["tail"] = new_tail
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return sh.constrain(logits, "logits"), new_cache

@@ -1,0 +1,5 @@
+"""Optimizers (pure JAX)."""
+
+from .adamw import adamw_init, adamw_update
+
+__all__ = ["adamw_init", "adamw_update"]

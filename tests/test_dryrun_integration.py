@@ -1,0 +1,35 @@
+"""Dry-run integration: one real cell through the 512-device path.
+
+Runs in a subprocess because the dry-run must own the
+``xla_force_host_platform_device_count`` flag before jax initializes
+(the test process itself keeps 1 device)."""
+
+import json
+import subprocess
+import sys
+
+
+def test_dryrun_single_cell(tmp_path):
+    out = tmp_path / "cell.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "internlm2-1.8b", "--shape", "decode_32k",
+         "--out", str(out)],
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        capture_output=True, text=True, timeout=540)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    rec = json.load(open(out))[0]
+    assert rec["n_devices"] == 256
+    assert rec["per_device"]["hlo_flops"] > 0
+    assert rec["per_device"]["collective_bytes"] > 0
+    assert set(rec["roofline_s"]) == {"compute", "memory", "collective"}
+    assert rec["bottleneck"] in ("compute", "memory", "collective")
+
+
+def test_dryrun_skip_rules():
+    from repro.configs import get_config
+
+    assert not get_config("deepseek-67b").supports_shape("long_500k")
+    assert not get_config("hubert-xlarge").supports_shape("decode_32k")
+    assert get_config("rwkv6-7b").supports_shape("long_500k")
+    assert get_config("recurrentgemma-9b").supports_shape("long_500k")

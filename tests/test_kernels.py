@@ -1,0 +1,157 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles.
+
+Kernels TARGET TPU; on this CPU container they execute in interpret mode
+(kernel body run in Python), which validates the block decomposition,
+accumulator logic and dequant math exactly.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _mk_quant(k, n):
+    base = RNG.integers(0, 256, (k, n)).astype(np.int8)
+    delta = RNG.integers(-128, 128, (k, n)).astype(np.int8)
+    return base, delta
+
+
+def _assert_close(got, want):
+    scale = float(jnp.max(jnp.abs(want))) + 1e-6
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5 * scale
+    )
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 128, 128),      # decode row
+        (8, 256, 128),
+        (64, 256, 192),     # non-multiple N → padding path
+        (128, 128, 128),    # exactly one block
+        (130, 384, 250),    # ragged everything
+    ],
+)
+@pytest.mark.parametrize("xdtype", [jnp.float32, jnp.bfloat16])
+def test_dequant_matmul_shapes(m, k, n, xdtype):
+    x = jnp.asarray(RNG.normal(0, 1, (m, k)), dtype=xdtype)
+    base, delta = _mk_quant(k, n)
+    bs, bz, ds, dz = 0.013, 117.0, 3.1e-4, 64.0
+    want = ref.dequant_matmul_ref(x, jnp.asarray(base), bs, bz, jnp.asarray(delta), ds, dz)
+    got = ops.dequant_matmul(x, jnp.asarray(base), bs, bz, jnp.asarray(delta), ds, dz)
+    _assert_close(got, want)
+
+
+@pytest.mark.parametrize("m,k,n", [(1, 128, 128), (16, 256, 256), (64, 384, 200)])
+def test_dequant_matmul_int4(m, k, n):
+    x = jnp.asarray(RNG.normal(0, 1, (m, k)), dtype=jnp.float32)
+    base = RNG.integers(0, 256, (k, n)).astype(np.int8)
+    d4 = RNG.integers(0, 16, (k, n)).astype(np.uint8)
+    packed = ops.pack_int4(d4)
+    bs, bz, ds, dz = 0.02, 128.0, 5e-4, 8.0
+    want = ref.dequant_matmul_int4_ref(
+        x, jnp.asarray(base), bs, bz, jnp.asarray(packed), ds, dz)
+    got = ops.dequant_matmul_int4(
+        x, jnp.asarray(base), bs, bz, jnp.asarray(packed), ds, dz)
+    _assert_close(got, want)
+    # And the unpack itself is exact.
+    assert (np.asarray(ref.unpack_int4_ref(jnp.asarray(packed))) == d4).all()
+
+
+def test_dequant_matmul_matches_materialized_weight():
+    """Fused kernel == materialize-then-matmul (the non-fused paper path)."""
+    m, k, n = 32, 256, 128
+    x = jnp.asarray(RNG.normal(0, 1, (m, k)), dtype=jnp.float32)
+    base, delta = _mk_quant(k, n)
+    bs, bz, ds, dz = 0.01, 100.0, 1e-4, 50.0
+    w = ref.dequantize_weight_ref(jnp.asarray(base), bs, bz, jnp.asarray(delta), ds, dz)
+    want = x @ w
+    got = ops.dequant_matmul(x, jnp.asarray(base), bs, bz, jnp.asarray(delta), ds, dz)
+    _assert_close(got, want)
+
+
+@pytest.mark.parametrize(
+    "n,d",
+    [(1, 128), (7, 300), (128, 512), (200, 1000), (130, 4096)],
+)
+def test_quantized_l2_shapes(n, d):
+    q = RNG.normal(0, 1, d).astype(np.float32)
+    codes = RNG.integers(0, 256, (n, d)).astype(np.uint8)
+    scales = RNG.uniform(1e-3, 2e-2, n).astype(np.float32)
+    if n > 3:
+        scales[3] = 0.0  # constant-row path
+    zps = RNG.integers(0, 256, n).astype(np.float32)
+    mids = RNG.normal(0, 0.5, n).astype(np.float32)
+    want = ref.quantized_l2_ref(
+        jnp.asarray(q), jnp.asarray(codes), jnp.asarray(scales),
+        jnp.asarray(zps), jnp.asarray(mids))
+    got = ops.quantized_l2(q, codes, scales, zps, mids)
+    _assert_close(got, want)
+
+
+def test_quantized_l2_matches_host_hnsw_distance():
+    """Kernel == the numpy hot loop actually used by the host HNSW."""
+    from repro.core.hnsw import quantized_l2_batch
+
+    n, d = 64, 777
+    q = RNG.normal(0, 1, d)
+    codes = RNG.integers(0, 256, (n, d)).astype(np.uint8)
+    scales = RNG.uniform(1e-3, 2e-2, n)
+    zps = RNG.integers(0, 256, n).astype(np.int64)
+    mids = np.zeros(n)
+    want = quantized_l2_batch(q, codes, scales, zps, mids)
+    got = ops.quantized_l2(
+        q.astype(np.float32), codes, scales.astype(np.float32),
+        zps.astype(np.float32), mids.astype(np.float32))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3)
+
+
+@pytest.mark.parametrize("block_k", [128, 256])
+def test_dequant_matmul_block_sweep(block_k):
+    m, k, n = 64, 512, 256
+    x = jnp.asarray(RNG.normal(0, 1, (m, k)), dtype=jnp.float32)
+    base, delta = _mk_quant(k, n)
+    bs, bz, ds, dz = 0.01, 100.0, 1e-4, 50.0
+    want = ref.dequant_matmul_ref(x, jnp.asarray(base), bs, bz, jnp.asarray(delta), ds, dz)
+    got = ops.dequant_matmul(
+        x, jnp.asarray(base), bs, bz, jnp.asarray(delta), ds, dz, block_k=block_k)
+    _assert_close(got, want)
+
+
+@pytest.mark.parametrize(
+    "b,sq,sk,h,kv,dh,causal,window",
+    [
+        (2, 256, 256, 8, 4, 64, True, 0),
+        (1, 256, 256, 4, 1, 128, True, 64),   # MQA + recurrentgemma window
+        (2, 128, 128, 8, 8, 64, False, 0),    # bidirectional (hubert)
+        (1, 200, 256, 8, 2, 64, True, 0),     # ragged Sq → padding path
+        (1, 384, 384, 16, 16, 80, False, 0),  # hubert dims (dh=80)
+    ],
+)
+def test_flash_attention_vs_ref(b, sq, sk, h, kv, dh, causal, window):
+    q = jnp.asarray(RNG.normal(0, 1, (b, sq, h, dh)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (b, sk, kv, dh)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (b, sk, kv, dh)), jnp.float32)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=2e-5)
+
+
+def test_flash_attention_matches_model_chunked_attention():
+    """Kernel == the pure-JAX chunked attention used by the model stack."""
+    from repro.models.layers import chunked_attention
+
+    b, s, h, kv, dh = 2, 256, 8, 2, 64
+    q = jnp.asarray(RNG.normal(0, 1, (b, s, h, dh)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (b, s, kv, dh)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (b, s, kv, dh)), jnp.float32)
+    want = chunked_attention(q, k, v, causal=True, chunk=64)
+    got = ops.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=2e-5)

@@ -1,0 +1,113 @@
+"""Property tests for the delta quantization core (paper Eq. 2/3)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.bitpack import (
+    pack_bits,
+    pack_bits_planar,
+    unpack_bits,
+    unpack_bits_planar,
+)
+from repro.core.quantize import (
+    QuantMeta,
+    delta_nbit,
+    dequantize_delta,
+    dequantize_linear,
+    extract_msb,
+    quantize_delta,
+    quantize_linear,
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    scale=st.floats(1e-6, 10.0),
+    loc=st.floats(-5.0, 5.0),
+    p_exp=st.integers(-24, -4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_delta_roundtrip_error_bounded(scale, loc, p_exp, seed):
+    """|dq(q(d)) - d| <= p for any delta distribution — the paper's core claim."""
+    p = 2.0 ** p_exp
+    rng = np.random.default_rng(seed)
+    d = rng.normal(loc, scale, 257)
+    q, meta = quantize_delta(d, p)
+    dq = dequantize_delta(q, meta)
+    assert np.abs(dq - d).max() <= p * (1 + 1e-9)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    rng_width=st.floats(1e-7, 100.0),
+    p_exp=st.integers(-24, -2),
+)
+def test_nbit_matches_eq2(rng_width, p_exp):
+    p = 2.0 ** p_exp
+    nbit = delta_nbit(0.0, rng_width, p)
+    if rng_width <= 2 * p:
+        assert nbit == 0
+    else:
+        import math
+        assert nbit == min(max(1, math.ceil(math.log2(rng_width / (2 * p)))), 32)
+
+
+def test_constant_delta_zero_bits():
+    q, meta = quantize_delta(np.full(100, 0.123), p=1e-6)
+    assert meta.nbit == 0
+    assert np.allclose(dequantize_delta(q, meta), 0.123, atol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), nbit=st.integers(2, 24), b=st.integers(1, 24))
+def test_extract_msb_scale_adjust(seed, nbit, b):
+    """Alg. 2 lines 6-8: truncation widens scale by 2^(nbit-b); error stays
+    bounded by the widened bin (~scale') not the original."""
+    rng = np.random.default_rng(seed)
+    q = rng.integers(0, 1 << nbit, 300)
+    meta = QuantMeta(scale=1e-5, zero_point=int(1 << (nbit - 1)), nbit=nbit)
+    qt, mt = extract_msb(q, meta, b)
+    if nbit <= b:
+        assert mt.nbit == nbit
+        return
+    assert mt.nbit == b
+    assert mt.scale == pytest.approx(meta.scale * (1 << (nbit - b)))
+    full = dequantize_delta(q, meta)
+    trunc = dequantize_delta(qt, mt)
+    assert np.abs(full - trunc).max() <= mt.scale * 1.5
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), nbit=st.integers(1, 30), n=st.integers(1, 500))
+def test_bitpack_roundtrip(seed, nbit, n):
+    rng = np.random.default_rng(seed)
+    v = rng.integers(0, 1 << nbit, n)
+    assert (unpack_bits(pack_bits(v, nbit), nbit, n) == v).all()
+    assert (unpack_bits_planar(pack_bits_planar(v, nbit), nbit, n) == v).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), nbit=st.integers(2, 24), b=st.integers(1, 24))
+def test_planar_partial_read_equals_msb(seed, nbit, b):
+    """Reading b bit-planes == extract_msb on fully-unpacked values."""
+    rng = np.random.default_rng(seed)
+    v = rng.integers(0, 1 << nbit, 257)
+    data = pack_bits_planar(v, nbit)
+    got = unpack_bits_planar(data, nbit, 257, b=min(b, nbit))
+    want = v >> max(nbit - b, 0)
+    assert (got == want).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), nbit=st.sampled_from([4, 8]))
+def test_linear_quant_roundtrip(seed, nbit):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, 1000)
+    q, meta = quantize_linear(x, nbit=nbit)
+    dq = dequantize_linear(q, meta)
+    # Error bounded by half a bin.
+    bin_w = (x.max() - x.min()) / (2**nbit - 1)
+    assert np.abs(dq - x).max() <= bin_w / 2 + 1e-12
+    assert q.min() >= 0 and q.max() <= 2**nbit - 1

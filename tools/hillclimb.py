@@ -1,0 +1,55 @@
+"""§Perf hillclimb driver: re-measure the three chosen cells with the
+optimization under test and emit before/after JSON.
+
+  PYTHONPATH=src python tools/hillclimb.py --out hillclimb.json
+"""
+
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+
+CELLS = [
+    # (label, arch, shape, kwargs)
+    ("arctic_train/grouped_moe", "arctic-480b", "train_4k", {}),
+    ("granite_train/grouped_moe", "granite-moe-3b-a800m", "train_4k", {}),
+    ("qwen3_train/dp_zero", "qwen3-8b", "train_4k", {"profile": "dp"}),
+    ("internlm2_train/dp_zero", "internlm2-1.8b", "train_4k", {"profile": "dp"}),
+    ("deepseek_decode/compressed", "deepseek-67b", "decode_32k",
+     {"compressed": True}),
+    ("qwen3_decode/compressed", "qwen3-8b", "decode_32k",
+     {"compressed": True}),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="hillclimb.json")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    results = []
+    for label, arch, shape, kw in CELLS:
+        if args.only and args.only not in label:
+            continue
+        print(f"\n### {label}: {arch} × {shape} {kw}")
+        try:
+            rec = run_cell(arch, shape, multi_pod=False, **kw)
+            rec["label"] = label
+        except Exception as e:
+            rec = {"label": label, "error": repr(e)[:500]}
+            print(f"!! {label} failed: {e!r}")
+        results.append(rec)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()
