@@ -1,0 +1,187 @@
+"""Tensor-index hot-path benchmark: vectorized HNSW vs the frozen seed.
+
+Measures, at the acceptance scale (1000 vertices, dim 4096 by default):
+
+* **insert throughput** — seed (`repro.core.hnsw_ref.SeedHNSWIndex`,
+  per-insert concatenate + set visited + dense distance) vs the rebuilt
+  `repro.core.hnsw.HNSWIndex` (amortized arrays + bitset + decomposed L2);
+* **k-NN search latency** over a fixed query batch, seed vs new;
+* **batched distance primitive** — one query against every resident vertex:
+  the seed's dense dequantize-and-einsum vs `HNSWIndex.batch_distances`
+  (float32 gemv + cached per-vertex norms);
+* **save_model / load_model wall time** through the grouped, dirty-aware
+  engine pipeline, with the index-cache stats (hits/misses/evictions/
+  dirty flushes) that the dirty-flag tracking exposes.
+
+Writes ``BENCH_hnsw.json`` at the repo root (first point of the perf
+trajectory) and prints the usual ``name,us_per_call,derived`` CSV rows.
+
+Run: ``PYTHONPATH=src python benchmarks/hnsw_bench.py [--n 1000] [--dim 4096]``
+or via the runner: ``PYTHONPATH=src python -m benchmarks.run hnsw`` (quick
+scale).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.engine import StorageEngine
+from repro.core.hnsw import HNSWIndex
+from repro.core.hnsw_ref import SeedHNSWIndex, quantized_l2_batch_dense
+
+
+def _bench_index(cls, data: np.ndarray, queries: np.ndarray, ef: int = 32):
+    dim = data.shape[1]
+    idx = cls(dim, seed=0)
+    t0 = time.perf_counter()
+    for row in data:
+        idx.insert(row)
+    insert_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for q in queries:
+        idx.search(q, k=5, ef=ef)
+    search_s = time.perf_counter() - t0
+    return idx, insert_s, search_s
+
+
+def _bench_batch_distance(new_idx: HNSWIndex, seed_idx: SeedHNSWIndex,
+                          queries: np.ndarray, reps: int = 3):
+    n = len(seed_idx)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        for q in queries:
+            quantized_l2_batch_dense(
+                q, seed_idx._codes, seed_idx._scales, seed_idx._zps, seed_idx._mids
+            )
+    dense_s = (time.perf_counter() - t0) / reps
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        for q in queries:
+            new_idx.batch_distances(q)
+    deco_s = (time.perf_counter() - t0) / reps
+    # Sanity: same distances (decomposed vs dense oracle).
+    q = queries[0]
+    np.testing.assert_allclose(
+        new_idx.batch_distances(q)[:n],
+        quantized_l2_batch_dense(q, seed_idx._codes, seed_idx._scales,
+                                 seed_idx._zps, seed_idx._mids),
+        rtol=1e-6,
+    )
+    return dense_s, deco_s
+
+
+def _bench_engine(dim: int, rng: np.random.Generator):
+    """save/load wall time on a base model + fine-tunes + one outlier."""
+    base = {
+        f"layer{i}/w": rng.normal(0, 0.02, dim).astype(np.float32)
+        for i in range(4)
+    }
+    base["head/w"] = rng.normal(0, 0.02, dim // 4).astype(np.float32)
+    out = {"save_s": [], "load_s": []}
+    with tempfile.TemporaryDirectory() as root:
+        eng = StorageEngine(root)
+        r = eng.save_model("base", {}, base)
+        out["save_s"].append(r.seconds)
+        for i in range(3):
+            ft = {k: v + rng.normal(0, 1e-5, v.shape).astype(np.float32)
+                  for k, v in base.items()}
+            out["save_s"].append(eng.save_model(f"ft{i}", {}, ft).seconds)
+        other = {k: rng.normal(0, 5.0, v.shape).astype(np.float32)
+                 for k, v in base.items()}
+        out["save_s"].append(eng.save_model("other", {}, other).seconds)
+        for name in ("base", "ft0", "other"):
+            t0 = time.perf_counter()
+            eng.load_model(name).materialize()
+            out["load_s"].append(time.perf_counter() - t0)
+        out["cache_stats"] = eng.index_cache.stats()
+    return out
+
+
+def run_bench(n: int = 1000, dim: int = 4096, n_queries: int = 50,
+              seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    data = rng.normal(0, 1, (n, dim))
+    queries = rng.normal(0, 1, (n_queries, dim))
+
+    new_idx, new_ins, new_sea = _bench_index(HNSWIndex, data, queries)
+    seed_idx, seed_ins, seed_sea = _bench_index(SeedHNSWIndex, data, queries)
+    dense_s, deco_s = _bench_batch_distance(
+        new_idx, seed_idx, queries[: min(8, n_queries)]
+    )
+    engine = _bench_engine(dim, rng)
+
+    return {
+        "config": {"n": n, "dim": dim, "n_queries": n_queries, "seed": seed},
+        "insert": {
+            "seed_s": seed_ins,
+            "new_s": new_ins,
+            "seed_vertices_per_s": n / seed_ins,
+            "new_vertices_per_s": n / new_ins,
+            "speedup": seed_ins / new_ins,
+        },
+        "knn_search": {
+            "seed_s": seed_sea,
+            "new_s": new_sea,
+            "seed_qps": n_queries / seed_sea,
+            "new_qps": n_queries / new_sea,
+            "speedup": seed_sea / new_sea,
+        },
+        "batch_distance": {
+            "dense_s_per_query": dense_s / min(8, n_queries),
+            "decomposed_s_per_query": deco_s / min(8, n_queries),
+            "speedup": dense_s / deco_s,
+        },
+        "save_load": engine,
+    }
+
+
+def run(csv):
+    """Runner entry point (quick scale, CSV convention)."""
+    res = run_bench(n=200, dim=1024, n_queries=20)
+    ins = res["insert"]
+    sea = res["knn_search"]
+    bd = res["batch_distance"]
+    csv.add("hnsw/insert", ins["new_s"] / res["config"]["n"] * 1e6,
+            f"speedup_vs_seed={ins['speedup']:.2f}x")
+    csv.add("hnsw/knn_search", sea["new_s"] / res["config"]["n_queries"] * 1e6,
+            f"speedup_vs_seed={sea['speedup']:.2f}x")
+    csv.add("hnsw/batch_distance", bd["decomposed_s_per_query"] * 1e6,
+            f"speedup_vs_seed={bd['speedup']:.2f}x")
+    csv.add("hnsw/save_model", float(np.mean(res["save_load"]["save_s"])) * 1e6,
+            f"dirty_flushes={res['save_load']['cache_stats']['dirty_flushes']}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=1000)
+    ap.add_argument("--dim", type=int, default=4096)
+    ap.add_argument("--queries", type=int, default=50)
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_hnsw.json"))
+    args = ap.parse_args()
+    res = run_bench(n=args.n, dim=args.dim, n_queries=args.queries)
+    res["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S")
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+    ins, sea, bd = res["insert"], res["knn_search"], res["batch_distance"]
+    print(f"insert:        {ins['seed_s']:.2f}s -> {ins['new_s']:.2f}s "
+          f"({ins['speedup']:.2f}x, {ins['new_vertices_per_s']:.0f} v/s)")
+    print(f"knn search:    {sea['seed_s']:.2f}s -> {sea['new_s']:.2f}s "
+          f"({sea['speedup']:.2f}x)")
+    print(f"batch dist:    {bd['dense_s_per_query']*1e3:.2f}ms -> "
+          f"{bd['decomposed_s_per_query']*1e3:.2f}ms ({bd['speedup']:.2f}x)")
+    print(f"save wall (s): {[round(s, 4) for s in res['save_load']['save_s']]}")
+    print(f"load wall (s): {[round(s, 4) for s in res['save_load']['load_s']]}")
+    print(f"cache stats:   {res['save_load']['cache_stats']}")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

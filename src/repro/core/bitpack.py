@@ -40,20 +40,39 @@ def planar_plane_bytes(count: int) -> int:
     return (count + 7) // 8
 
 
+# Values per chunk for planar (un)packing: multiple of 8 so every chunk
+# boundary is byte-aligned within a plane; sized to keep the per-chunk bit
+# matrix in L2 even at nbit=64.
+_PLANE_CHUNK = 1 << 16
+
+
 def pack_bits_planar(values: np.ndarray, nbit: int) -> bytes:
     """Pack as ``nbit`` bit-planes, most-significant plane first.
 
     Plane ``k`` (0-based) holds bit ``nbit-1-k`` of every value. A reader
     wanting only the top ``b`` bits reads ``b * planar_plane_bytes(n)`` bytes.
+
+    All planes of a value-chunk are built with one broadcast shift and one
+    row-wise ``np.packbits`` (``axis=1`` pads each plane independently to a
+    byte boundary — exactly the planar on-disk layout). Values are
+    processed in byte-aligned chunks so transient memory stays bounded at
+    ~9·nbit·CHUNK bytes for any input size and the working set stays
+    cache-resident; only the final chunk may be ragged, and its per-row
+    padding coincides with the global plane padding.
     """
     if nbit == 0 or values.size == 0:
         return b""
     v = np.ascontiguousarray(values.ravel(), dtype=np.uint64)
-    out = bytearray()
-    for k in range(nbit - 1, -1, -1):
-        plane = ((v >> np.uint64(k)) & 1).astype(np.uint8)
-        out += np.packbits(plane).tobytes()
-    return bytes(out)
+    n = v.size
+    plane_nbytes = planar_plane_bytes(n)
+    shifts = np.arange(nbit - 1, -1, -1, dtype=np.uint64)[:, None]
+    out = np.empty((nbit, plane_nbytes), dtype=np.uint8)
+    chunk = _PLANE_CHUNK  # multiple of 8 → chunk planes stay byte-aligned
+    for start in range(0, n, chunk):
+        seg = v[start:start + chunk]
+        bits = ((seg[None, :] >> shifts) & np.uint64(1)).astype(np.uint8)
+        out[:, start // 8: start // 8 + (seg.size + 7) // 8] = np.packbits(bits, axis=1)
+    return out.tobytes()
 
 
 def unpack_bits_planar(data: bytes, nbit: int, count: int, b: int | None = None) -> np.ndarray:
@@ -61,14 +80,28 @@ def unpack_bits_planar(data: bytes, nbit: int, count: int, b: int | None = None)
 
     Returns values of width ``min(b, nbit)`` — i.e. already MSB-truncated,
     matching :func:`repro.core.quantize.extract_msb` on the full values.
+    Inverse of :func:`pack_bits_planar`: per byte-aligned value-chunk, one
+    ``np.unpackbits`` over the (b, chunk_bytes) view and an in-place
+    shift-or fold over the ≤64 plane rows — transient memory is bounded by
+    the chunk, not by ``b·count``.
     """
     if nbit == 0 or count == 0:
         return np.zeros(count, dtype=np.int64)
     b = nbit if b is None else min(b, nbit)
+    if b <= 0:
+        return np.zeros(count, dtype=np.int64)
     plane_nbytes = planar_plane_bytes(count)
-    buf = np.frombuffer(data, dtype=np.uint8)
-    acc = np.zeros(count, dtype=np.int64)
-    for k in range(b):
-        plane = np.unpackbits(buf[k * plane_nbytes:(k + 1) * plane_nbytes], count=count)
-        acc = (acc << 1) | plane.astype(np.int64)
+    planes = np.frombuffer(data, dtype=np.uint8)[: b * plane_nbytes]
+    planes = planes.reshape(b, plane_nbytes)
+    acc = np.empty(count, dtype=np.int64)
+    chunk = _PLANE_CHUNK
+    for start in range(0, count, chunk):
+        stop = min(start + chunk, count)
+        seg = planes[:, start // 8: (stop + 7) // 8]
+        bits = np.unpackbits(seg, axis=1, count=stop - start)
+        out = acc[start:stop]
+        out[:] = bits[0]
+        for k in range(1, b):
+            out <<= 1
+            out |= bits[k]
     return acc

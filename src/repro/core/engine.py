@@ -14,6 +14,18 @@ Components mirroring Figure 3:
 ``save_model`` is Algorithm 1 verbatim: decouple → per-tensor ANN search →
 delta encode → SHOULDCOMPRESS(δ) range-vs-τ check → (maybe) new vertex →
 adaptive n-bit quantization → page write.
+
+Save-pipeline hot path (this is the throughput-critical write side):
+
+* tensors are **grouped by flattened dim** so each HNSW index is fetched
+  from the cache once per save instead of once per tensor;
+* only the index search/insert and metadata mutation run under the global
+  lock — delta quantization, planar bit-packing and page assembly happen
+  outside it, so concurrent saves overlap their CPU-heavy encode work;
+* the index cache tracks a **dirty flag per index**: ``flush()`` (called at
+  commit) reserializes only indexes that gained a vertex during this save.
+  The seed flushed every resident index on every save — O(total resident
+  index bytes) of pickling per save even when nothing changed.
 """
 
 from __future__ import annotations
@@ -28,7 +40,7 @@ from collections import OrderedDict
 import numpy as np
 
 from .hnsw import HNSWIndex
-from .pages import TensorPage, TensorRecord, read_page_header, write_page
+from .pages import TensorPage, TensorRecord, encode_payload, read_page_header, write_page
 from .quantize import (
     dequantize_delta,
     quantize_delta,
@@ -62,15 +74,27 @@ class SaveReport:
 
 
 class _IndexCache:
-    """LRU cache of deserialized HNSW indexes, bounded by bytes (paper §4.1)."""
+    """LRU cache of deserialized HNSW indexes, bounded by bytes (paper §4.1).
+
+    Tracks a dirty flag per resident index: ``flush()`` writes only indexes
+    mutated since their last serialization, and eviction skips the disk
+    write for clean indexes that already have an on-disk copy. A save in
+    progress **pins** the dims it is mutating so a concurrent load's
+    ``get`` can never evict an index out from under the insert loop (a
+    detached-but-still-mutating index would silently lose vertices).
+    """
 
     def __init__(self, root: str, budget_bytes: int):
         self.root = root
         self.budget = budget_bytes
         self._live: OrderedDict[int, HNSWIndex] = OrderedDict()
+        self._dirty: set[int] = set()
+        self._pins: dict[int, int] = {}
         self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
+        self.dirty_flushes = 0
 
     def _path(self, dim: int) -> str:
         return os.path.join(self.root, f"hnsw_{dim}.idx")
@@ -87,6 +111,8 @@ class _IndexCache:
                 with open(path, "rb") as f:
                     idx = HNSWIndex.from_bytes(f.read())
             elif create:
+                # A fresh index is still a miss: nothing resident served it.
+                self.misses += 1
                 idx = HNSWIndex(dim)
             else:
                 return None
@@ -94,20 +120,66 @@ class _IndexCache:
             self._evict()
             return idx
 
+    def mark_dirty(self, dim: int) -> None:
+        """Record that the resident index for ``dim`` was mutated."""
+        with self._lock:
+            self._dirty.add(dim)
+
+    def pin(self, dim: int) -> None:
+        """Exempt ``dim`` from eviction while a save mutates it."""
+        with self._lock:
+            self._pins[dim] = self._pins.get(dim, 0) + 1
+
+    def unpin(self, dim: int) -> None:
+        with self._lock:
+            n = self._pins.get(dim, 0) - 1
+            if n > 0:
+                self._pins[dim] = n
+            else:
+                self._pins.pop(dim, None)
+
+    def _write(self, dim: int, idx: HNSWIndex) -> None:
+        with open(self._path(dim), "wb") as f:
+            f.write(idx.to_bytes())
+
     def _evict(self) -> None:
         while len(self._live) > 1 and self.resident_bytes() > self.budget:
-            dim, idx = self._live.popitem(last=False)
-            with open(self._path(dim), "wb") as f:
-                f.write(idx.to_bytes())
+            newest = next(reversed(self._live))  # being handed to a caller
+            victim = next(
+                (d for d in self._live if d not in self._pins and d != newest),
+                None,
+            )
+            if victim is None:
+                return  # everything else resident is pinned by in-flight saves
+            idx = self._live.pop(victim)
+            self.evictions += 1
+            if victim in self._dirty or not os.path.exists(self._path(victim)):
+                self._write(victim, idx)
+                self._dirty.discard(victim)
 
     def resident_bytes(self) -> int:
         return sum(i.nbytes for i in self._live.values())
 
     def flush(self) -> None:
+        """Serialize mutated resident indexes only (dirty-aware)."""
         with self._lock:
             for dim, idx in self._live.items():
-                with open(self._path(dim), "wb") as f:
-                    f.write(idx.to_bytes())
+                if dim in self._dirty or not os.path.exists(self._path(dim)):
+                    self._write(dim, idx)
+                    self.dirty_flushes += 1
+            self._dirty.clear()
+
+    def stats(self) -> dict:
+        """Cache counters for the benchmarks (hnsw_bench reports these)."""
+        with self._lock:
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "dirty_flushes": self.dirty_flushes,
+                "resident": len(self._live),
+                "dirty": len(self._dirty),
+            }
 
     def dims(self) -> list[int]:
         with self._lock:
@@ -174,52 +246,89 @@ class StorageEngine:
         records land in page order matching the computation graph (paper
         §4.1 "delta tensors are organized in the order defined by the model
         architecture").
+
+        The index work is grouped by flattened dim (one cache fetch per
+        index) and runs under the engine lock; the CPU-heavy delta
+        quantization + planar bit-packing run after the lock is released.
+        Page records keep the original tensor order regardless of grouping.
         """
         t0 = time.perf_counter()
         p = self.tolerance if tolerance is None else tolerance
         tau_ = self.tau if tau is None else tau
-        records: list[TensorRecord] = []
-        n_new = 0
-        nbits: list[int] = []
+        # Grouping needs only names/shapes — no float64 upcast is made here.
+        items: list[tuple[str, tuple[int, ...], object]] = []
+        by_dim: "OrderedDict[int, list[int]]" = OrderedDict()
         original_bytes = 0
+        for tname, tensor in tensors.items():
+            src = np.asarray(tensor)
+            original_bytes += src.size * 4  # stored models are float32
+            by_dim.setdefault(src.size, []).append(len(items))
+            items.append((tname, tuple(int(s) for s in src.shape), src))
+
+        # Phase 1 (locked): per-dim ANN search / vertex insert (Alg. 1
+        # l.2-3). Dims are pinned so a concurrent load's cache fetch cannot
+        # evict an index this save is mutating. Each tensor's float64
+        # upcast lives only for its own search/insert; only the delta
+        # survives the loop.
+        bases: list[tuple[int, np.ndarray] | None] = [None] * len(items)
+        n_new = 0
+        for dim in by_dim:
+            self.index_cache.pin(dim)
+        try:
+            with self._lock:
+                for dim, positions in by_dim.items():
+                    index = self.index_cache.get(dim, create=True)
+                    for pos in positions:
+                        flat = np.asarray(items[pos][2], dtype=np.float64).ravel()
+                        # (2) ANN search for the closest base tensor.
+                        hit = index.search(flat, k=1, ef=self.ef_search)
+                        vid = hit[0][1] if hit else -1
+                        if vid >= 0:
+                            base = index.dequantize_vertex(vid)
+                            delta = flat - base
+                        else:
+                            delta = None
+                        # (3) SHOULDCOMPRESS: range-of-delta vs tau (§4.2).
+                        if delta is None or float(delta.max() - delta.min()) > tau_:
+                            # New vertex: quantize t to 8-bit, insert,
+                            # recompute delta against its own de-quantized
+                            # representation.
+                            vid = index.insert(flat)
+                            self.index_cache.mark_dirty(dim)
+                            base = index.dequantize_vertex(vid)
+                            delta = flat - base
+                            n_new += 1
+                        bases[pos] = (vid, delta)
+                        self._ref_vertex(dim, vid)
+        finally:
+            for dim in by_dim:
+                self.index_cache.unpin(dim)
+
+        # Phase 2 (unlocked): adaptive n-bit quantization of each delta
+        # (Eq. 2/3) + planar bit-packing + page assembly, in tensor order.
+        # Deltas are released as they are consumed.
+        records: list[TensorRecord] = []
+        nbits: list[int] = []
+        for i, (tname, shape, src) in enumerate(items):
+            vid, delta = bases[i]
+            bases[i] = None
+            qd, meta = quantize_delta(delta, p)
+            nbits.append(meta.nbit)
+            rec = TensorRecord(
+                name=tname,
+                shape=shape,
+                dim_key=src.size,
+                vertex_id=vid,
+                meta=meta,
+                qdelta=qd,
+            )
+            rec.payload = encode_payload(rec)
+            records.append(rec)
+        page = write_page(records)
+
+        # Phase 3 (locked): durable commit — page file, metadata, dirty
+        # indexes only.
         with self._lock:
-            for tname, tensor in tensors.items():
-                arr = np.asarray(tensor, dtype=np.float64)
-                original_bytes += arr.size * 4  # stored models are float32
-                flat = arr.ravel()
-                dim = flat.size
-                index = self.index_cache.get(dim, create=True)
-                # (2) ANN search for the closest base tensor.
-                hit = index.search(flat, k=1, ef=self.ef_search)
-                vid = hit[0][1] if hit else -1
-                if vid >= 0:
-                    base = index.dequantize_vertex(vid)
-                    delta = flat - base
-                else:
-                    delta = None
-                # (3) SHOULDCOMPRESS: range-of-delta vs tau (paper §4.2).
-                if delta is None or float(delta.max() - delta.min()) > tau_:
-                    # New vertex: quantize t to 8-bit, insert, recompute delta
-                    # against its own de-quantized representation.
-                    vid = index.insert(flat)
-                    base = index.dequantize_vertex(vid)
-                    delta = flat - base
-                    n_new += 1
-                # (4) Adaptive n-bit quantization of the delta (Eq. 2/3).
-                qd, meta = quantize_delta(delta, p)
-                nbits.append(meta.nbit)
-                records.append(
-                    TensorRecord(
-                        name=tname,
-                        shape=tuple(int(s) for s in arr.shape),
-                        dim_key=dim,
-                        vertex_id=vid,
-                        meta=meta,
-                        qdelta=qd,
-                    )
-                )
-                self._ref_vertex(dim, vid)
-            page = write_page(records)
             model_id = self._meta["next_id"]
             self._meta["next_id"] = model_id + 1
             with open(self._page_path(model_id), "wb") as f:
@@ -264,16 +373,21 @@ class StorageEngine:
         return list(self._meta["models"].keys())
 
     def storage_bytes(self) -> dict:
-        """Total storage split: pages vs index (paper Fig. 10a breakdown)."""
-        pages = sum(
-            os.path.getsize(os.path.join(self.root, "pages", m["page"]))
-            for m in self._meta["models"].values()
-        )
-        self.index_cache.flush()
-        index = sum(
-            os.path.getsize(os.path.join(self.root, "index", f))
-            for f in os.listdir(os.path.join(self.root, "index"))
-        )
+        """Total storage split: pages vs index (paper Fig. 10a breakdown).
+
+        Takes the engine lock so the flush never serializes an index that a
+        concurrent ``save_model`` phase 1 is mutating.
+        """
+        with self._lock:
+            pages = sum(
+                os.path.getsize(os.path.join(self.root, "pages", m["page"]))
+                for m in self._meta["models"].values()
+            )
+            self.index_cache.flush()
+            index = sum(
+                os.path.getsize(os.path.join(self.root, "index", f))
+                for f in os.listdir(os.path.join(self.root, "index"))
+            )
         return {"pages": pages, "index": index, "total": pages + index}
 
     def per_model_bytes(self, name: str) -> float:

@@ -1,0 +1,180 @@
+"""Frozen seed HNSW implementation — the parity oracle for the fast index.
+
+This module preserves the original (pre-vectorization) tensor index exactly
+as it shipped in the seed: per-insert ``np.concatenate`` growth, Python-set
+visited tracking, and a dense dequantize-then-einsum distance. It exists so
+that
+
+* ``tests/test_hotpath.py`` can assert the rewritten
+  :class:`repro.core.hnsw.HNSWIndex` returns identical neighbor ids (and
+  distances within fp tolerance) on fixed-seed workloads, and
+* ``benchmarks/hnsw_bench.py`` can measure the speedup of the vectorized
+  hot path against the true seed baseline rather than a synthetic stand-in.
+
+Do not optimize this file — its value is being slow in exactly the way the
+seed was.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from .quantize import QuantMeta, quantize_linear
+
+__all__ = ["quantized_l2_batch_dense", "SeedHNSWIndex"]
+
+
+def quantized_l2_batch_dense(
+    query: np.ndarray,
+    codes: np.ndarray,
+    scales: np.ndarray,
+    zero_points: np.ndarray,
+    mids: np.ndarray,
+) -> np.ndarray:
+    """Seed oracle: squared L2 via explicit dequantization of every row.
+
+    Materializes the full (N, D) float64 dequantized matrix — the exact
+    computation the decomposed form in ``repro.core.hnsw`` must reproduce.
+    """
+    deq = (codes.astype(np.float64) - zero_points[:, None]) * scales[:, None]
+    const_rows = scales == 0.0
+    if const_rows.any():
+        deq[const_rows] = mids[const_rows, None]
+    diff = deq - query[None, :].astype(np.float64)
+    return np.einsum("nd,nd->n", diff, diff)
+
+
+class SeedHNSWIndex:
+    """The seed multi-layer HNSW, verbatim (O(n) copy per insert)."""
+
+    def __init__(self, dim: int, m: int = 16, ef_construction: int = 64, seed: int = 0):
+        self.dim = dim
+        self.m = m
+        self.m0 = 2 * m
+        self.ef_construction = ef_construction
+        self.ml = 1.0 / math.log(m)
+        self._rng = np.random.default_rng(seed)
+        self._codes = np.zeros((0, dim), dtype=np.uint8)
+        self._scales = np.zeros((0,), dtype=np.float64)
+        self._zps = np.zeros((0,), dtype=np.int32)
+        self._mids = np.zeros((0,), dtype=np.float64)
+        self._levels: list[int] = []
+        self._neighbors: list[dict[int, list[int]]] = []
+        self._entry: int | None = None
+        self._max_level = -1
+
+    def __len__(self) -> int:
+        return len(self._levels)
+
+    def vertex_codes(self, vid: int) -> tuple[np.ndarray, QuantMeta]:
+        meta = QuantMeta(
+            scale=float(self._scales[vid]),
+            zero_point=int(self._zps[vid]),
+            nbit=8,
+            mid=float(self._mids[vid]),
+        )
+        return self._codes[vid], meta
+
+    def dequantize_vertex(self, vid: int) -> np.ndarray:
+        codes, meta = self.vertex_codes(vid)
+        if meta.scale == 0.0:
+            return np.full(self.dim, meta.mid, dtype=np.float64)
+        return (codes.astype(np.float64) - meta.zero_point) * meta.scale
+
+    def _distances(self, query: np.ndarray, ids: list[int]) -> np.ndarray:
+        idx = np.asarray(ids, dtype=np.int64)
+        return quantized_l2_batch_dense(
+            query, self._codes[idx], self._scales[idx], self._zps[idx], self._mids[idx]
+        )
+
+    def _search_layer(
+        self, query: np.ndarray, entry: list[int], ef: int, layer: int
+    ) -> list[tuple[float, int]]:
+        import heapq
+
+        visited = set(entry)
+        dists = self._distances(query, entry)
+        cand: list[tuple[float, int]] = [(d, v) for d, v in zip(dists, entry)]
+        heapq.heapify(cand)
+        best: list[tuple[float, int]] = [(-d, v) for d, v in zip(dists, entry)]
+        heapq.heapify(best)
+        while len(best) > ef:
+            heapq.heappop(best)
+        adj = self._neighbors[layer]
+        while cand:
+            d, v = heapq.heappop(cand)
+            if best and d > -best[0][0]:
+                break
+            fresh = [u for u in adj.get(v, ()) if u not in visited]
+            if not fresh:
+                continue
+            visited.update(fresh)
+            fd = self._distances(query, fresh)
+            bound = -best[0][0]
+            for du, u in zip(fd, fresh):
+                if len(best) < ef or du < bound:
+                    heapq.heappush(cand, (du, u))
+                    heapq.heappush(best, (-du, u))
+                    if len(best) > ef:
+                        heapq.heappop(best)
+                    bound = -best[0][0]
+        return sorted((-nd, v) for nd, v in best)
+
+    def search(self, query: np.ndarray, k: int = 1, ef: int | None = None) -> list[tuple[float, int]]:
+        if self._entry is None:
+            return []
+        ef = max(ef or self.ef_construction, k)
+        q = np.asarray(query, dtype=np.float64).ravel()
+        entry = [self._entry]
+        for layer in range(self._max_level, 0, -1):
+            entry = [self._search_layer(q, entry, 1, layer)[0][1]]
+        return self._search_layer(q, entry, ef, 0)[:k]
+
+    def _select_neighbors(self, cands: list[tuple[float, int]], m: int) -> list[int]:
+        return [v for _, v in sorted(cands)[:m]]
+
+    def insert(self, tensor: np.ndarray) -> int:
+        q = np.asarray(tensor, dtype=np.float64).ravel()
+        assert q.size == self.dim, (q.size, self.dim)
+        codes, meta = quantize_linear(q, nbit=8)
+        vid = len(self._levels)
+        self._codes = np.concatenate([self._codes, codes.astype(np.uint8)[None, :]])
+        self._scales = np.append(self._scales, meta.scale)
+        self._zps = np.append(self._zps, meta.zero_point)
+        self._mids = np.append(self._mids, meta.mid)
+        level = int(-math.log(max(self._rng.random(), 1e-12)) * self.ml)
+        self._levels.append(level)
+        while len(self._neighbors) <= level:
+            self._neighbors.append({})
+        for layer in range(level + 1):
+            self._neighbors[layer].setdefault(vid, [])
+
+        if self._entry is None:
+            self._entry = vid
+            self._max_level = level
+            return vid
+
+        entry = [self._entry]
+        for layer in range(self._max_level, level, -1):
+            entry = [self._search_layer(q, entry, 1, layer)[0][1]]
+        for layer in range(min(level, self._max_level), -1, -1):
+            cands = self._search_layer(q, entry, self.ef_construction, layer)
+            m = self.m0 if layer == 0 else self.m
+            nbrs = self._select_neighbors(cands, m)
+            adj = self._neighbors[layer]
+            adj[vid] = list(nbrs)
+            for u in nbrs:
+                lst = adj.setdefault(u, [])
+                lst.append(vid)
+                if len(lst) > m:
+                    base_u = self.dequantize_vertex(u)
+                    du = self._distances(base_u, lst)
+                    order = np.argsort(du)[:m]
+                    adj[u] = [lst[i] for i in order]
+            entry = [v for _, v in cands]
+        if level > self._max_level:
+            self._max_level = level
+            self._entry = vid
+        return vid

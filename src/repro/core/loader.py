@@ -27,7 +27,7 @@ from collections import Counter
 
 import numpy as np
 
-from .pages import TensorPage, TensorRecord, read_record, read_record_partial
+from .pages import TensorPage, TensorRecord, decode_payload, read_record, read_record_partial
 from .quantize import dequantize_delta
 
 __all__ = ["LoadedModel", "PipelineLoader", "reconstruct_jnp"]
@@ -56,11 +56,15 @@ class LoadedModel:
         self.bits = bits
         self._records: dict[str, TensorRecord] = {}
         self._order: list[str] = []
+        # Records are read with packed payloads only (decode=False): the
+        # vectorized planar bit-unpack runs lazily on first tensor access,
+        # so open-time cost is header parsing + payload slicing and the
+        # pipeline's dequant stage does the unpack work (paper §4.3.3).
         for i in range(page.n_records):
             rec = (
-                read_record_partial(page, i, bits)
+                read_record_partial(page, i, bits, decode=False)
                 if bits is not None
-                else read_record(page, i)
+                else read_record(page, i, decode=False)
             )
             self._records[rec.name] = rec
             self._order.append(rec.name)
@@ -76,8 +80,13 @@ class LoadedModel:
     def tensor_names(self) -> list[str]:
         return list(self._order)
 
+    def _ensure_decoded(self, rec: TensorRecord) -> TensorRecord:
+        if rec.qdelta is None:
+            rec.qdelta = decode_payload(rec)
+        return rec
+
     def record(self, name: str) -> TensorRecord:
-        return self._records[name]
+        return self._ensure_decoded(self._records[name])
 
     # ------------------------------------------------- on-demand decompress
     def _base(self, rec: TensorRecord) -> np.ndarray:
@@ -97,7 +106,7 @@ class LoadedModel:
 
     def tensor(self, name: str) -> np.ndarray:
         """Reconstruct one tensor to float32 (base + delta, on demand)."""
-        rec = self._records[name]
+        rec = self._ensure_decoded(self._records[name])
         base = self._base(rec)
         delta = dequantize_delta(rec.qdelta, rec.meta)
         return (base + delta).reshape(rec.shape).astype(np.float32)
@@ -117,7 +126,7 @@ class LoadedModel:
         """
         out = {}
         for name in self._order:
-            rec = self._records[name]
+            rec = self._ensure_decoded(self._records[name])
             index = self.engine.index_cache.get(rec.dim_key)
             codes, bmeta = index.vertex_codes(rec.vertex_id)
             # int8-safe recentring for the TPU kernels: uint8 codes c with
@@ -166,7 +175,10 @@ class PipelineLoader:
         def stage_io():
             for name in names:
                 t0 = time.perf_counter()
-                rec = self.model.record(name)  # payload already page-resident
+                # record() triggers the lazy planar bit-unpack, so this
+                # stage does the real payload-decode work while the dequant
+                # stage reconstructs the previous tensor.
+                rec = self.model.record(name)
                 busy["io"] += time.perf_counter() - t0
                 q_io.put((name, rec))
             q_io.put(None)

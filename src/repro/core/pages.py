@@ -26,7 +26,10 @@ import numpy as np
 from .bitpack import pack_bits_planar, planar_plane_bytes, unpack_bits_planar
 from .quantize import QuantMeta
 
-__all__ = ["TensorRecord", "TensorPage", "write_page", "read_page_header", "read_record", "read_record_partial"]
+__all__ = [
+    "TensorRecord", "TensorPage", "write_page", "read_page_header",
+    "read_record", "read_record_partial", "encode_payload", "decode_payload",
+]
 
 _MAGIC = b"NSPG"
 _VERSION = 2
@@ -59,11 +62,27 @@ class TensorRecord:
         return self.meta.nbit * planar_plane_bytes(self.numel)
 
 
+def encode_payload(rec: TensorRecord) -> bytes:
+    """Planar-pack a record's quantized delta (all planes in one packbits).
+
+    The engine calls this outside its global lock so the bit-packing CPU
+    work never serializes concurrent saves.
+    """
+    if rec.qdelta is None or rec.meta.nbit == 0:
+        return b""
+    return pack_bits_planar(rec.qdelta, rec.meta.nbit)
+
+
+def decode_payload(rec: TensorRecord) -> np.ndarray:
+    """Unpack a record's payload into int64 codes (inverse of encode)."""
+    if rec.meta.nbit == 0:
+        return np.zeros(rec.numel, dtype=np.int64)
+    return unpack_bits_planar(rec.payload, rec.meta.nbit, rec.numel)
+
+
 def _encode_record(rec: TensorRecord) -> bytes:
     name_b = rec.name.encode("utf-8")
-    payload = rec.payload or (
-        pack_bits_planar(rec.qdelta, rec.meta.nbit) if rec.qdelta is not None else b""
-    )
+    payload = rec.payload or encode_payload(rec)
     fixed = _REC_FIXED.pack(
         len(name_b), len(rec.shape), rec.vertex_id, rec.dim_key, rec.numel,
         rec.meta.scale, rec.meta.zero_point, rec.meta.nbit, rec.meta.mid,
@@ -72,7 +91,12 @@ def _encode_record(rec: TensorRecord) -> bytes:
     return fixed + name_b + dims + payload
 
 
-def _decode_record(buf: memoryview, with_payload: bool = True, bits: int | None = None) -> TensorRecord:
+def _decode_record(
+    buf: memoryview,
+    with_payload: bool = True,
+    bits: int | None = None,
+    decode: bool = True,
+) -> TensorRecord:
     (name_len, ndim, vertex, dim_key, numel, scale, zp, nbit, mid) = _REC_FIXED.unpack_from(buf, 0)
     off = _REC_FIXED.size
     name = bytes(buf[off:off + name_len]).decode("utf-8")
@@ -85,17 +109,19 @@ def _decode_record(buf: memoryview, with_payload: bool = True, bits: int | None 
     if with_payload and nbit > 0:
         plane = planar_plane_bytes(numel)
         b = nbit if bits is None else min(bits, nbit)
-        payload = bytes(buf[off:off + b * plane])
-        q = unpack_bits_planar(payload, nbit, numel, b=b)
+        rec.payload = bytes(buf[off:off + b * plane])
         if b < nbit:
             # MSB-truncated read: widen scale, shift zero point (Alg. 2 l.6-8).
+            # The stored payload holds exactly the top b planes, so the
+            # record stays self-consistent with its truncated meta.
             shift = nbit - b
-            meta = QuantMeta(scale=scale * (1 << shift), zero_point=zp >> shift,
-                             nbit=b, mid=mid)
-            rec.meta = meta
-        rec.qdelta = q
+            rec.meta = QuantMeta(scale=scale * (1 << shift), zero_point=zp >> shift,
+                                 nbit=b, mid=mid)
+        if decode:
+            rec.qdelta = decode_payload(rec)
     elif with_payload:
-        rec.qdelta = np.zeros(numel, dtype=np.int64)
+        if decode:
+            rec.qdelta = np.zeros(numel, dtype=np.int64)
     return rec
 
 
@@ -142,16 +168,23 @@ def read_page_header(buf: bytes) -> TensorPage:
     return TensorPage(buf=buf, offsets=offsets)
 
 
-def read_record(page: TensorPage, i: int, with_payload: bool = True) -> TensorRecord:
+def read_record(page: TensorPage, i: int, with_payload: bool = True,
+                decode: bool = True) -> TensorRecord:
+    """Read record i. ``decode=False`` keeps the payload as packed bytes
+    (``qdelta=None``) so callers can defer bit-unpacking — the loader uses
+    this to push decode work into its pipeline's dequant stage."""
     o, l = page.offsets[i]
-    return _decode_record(memoryview(page.buf)[o:o + l], with_payload=with_payload)
+    return _decode_record(memoryview(page.buf)[o:o + l], with_payload=with_payload,
+                          decode=decode)
 
 
-def read_record_partial(page: TensorPage, i: int, bits: int) -> TensorRecord:
+def read_record_partial(page: TensorPage, i: int, bits: int,
+                        decode: bool = True) -> TensorRecord:
     """Flexible loading: read only the top ``bits`` bit-planes of record i.
 
     I/O saved is real — only ``bits * plane_bytes`` of the payload region is
     touched, matching the paper's reduced disk I/O claim (Fig. 11).
     """
     o, l = page.offsets[i]
-    return _decode_record(memoryview(page.buf)[o:o + l], with_payload=True, bits=bits)
+    return _decode_record(memoryview(page.buf)[o:o + l], with_payload=True,
+                          bits=bits, decode=decode)

@@ -80,7 +80,12 @@ def dequant_matmul_int4(x, base, base_scale, base_zp, packed_delta,
 
 def quantized_l2(query, codes, scales, zps, mids,
                  *, block_n=128, block_d=512, interpret=None):
-    """HNSW distance hot loop; pads N and D, returns (N,) f32."""
+    """HNSW distance hot loop; pads N and D, returns (N,) f32.
+
+    The kernel computes the decomposed form (code moments + per-row quant
+    params; see ``quantized_l2.py``) — zero padding is exact because padded
+    codes/query columns contribute nothing to the accumulated moments.
+    """
     if interpret is None:
         interpret = not _on_tpu()
     n, d = codes.shape

@@ -16,6 +16,7 @@ __all__ = [
     "unpack_int4_ref",
     "dequant_matmul_int4_ref",
     "quantized_l2_ref",
+    "quantized_l2_batch_ref",
 ]
 
 
@@ -57,11 +58,19 @@ def dequant_matmul_int4_ref(x, base, base_scale, base_zp, packed_delta,
     return jnp.dot(x.astype(jnp.float32), b + d, preferred_element_type=jnp.float32)
 
 
+# The seed's dense float64 hot loop, kept as the parity oracle for the
+# decomposed distance in ``repro.core.hnsw`` (same semantics, numpy).
+from repro.core.hnsw_ref import quantized_l2_batch_dense as quantized_l2_batch_ref  # noqa: E402
+
+
 def quantized_l2_ref(query, codes, scales, zps, mids):
     """Squared L2 between f32 query (D,) and N quantized rows (N, D).
 
     Row i dequantizes as (codes[i] - zps[i]) * scales[i], or the constant
     mids[i] when scales[i] == 0 — mirroring ``hnsw.quantized_l2_batch``.
+    The Pallas kernel computes this in decomposed form (see
+    ``quantized_l2.py``); this dense version defines the semantics it must
+    reproduce.
     """
     deq = (codes.astype(jnp.float32) - zps[:, None]) * scales[:, None]
     deq = jnp.where(scales[:, None] == 0.0, mids[:, None], deq)
