@@ -1,0 +1,158 @@
+"""Model-lifecycle benchmark: save N models → delete half → vacuum.
+
+Measures the catalog/GC path added with the transactional lifecycle
+subsystem:
+
+* **delete throughput** — journaled ``delete_model`` wall time (page unlink
+  + ref decrement + tombstoning, one transaction each);
+* **vacuum** — per-dim sweep + HNSW compaction + page rewrite wall time,
+  and the bytes it reclaims (pages freed by the deletes, index bytes freed
+  by dropping dead vertices);
+* **post-vacuum load parity** — every surviving model must ``materialize()``
+  bit-identically to its pre-delete snapshot (the lifecycle parity bar);
+* **reopen** — engine restart over the vacuumed store (journal replay is a
+  no-op on a clean store, so this times catalog load only).
+
+Writes ``BENCH_lifecycle.json`` at the repo root (the lifecycle point of
+the perf trajectory) and prints the usual ``name,us_per_call,derived`` CSV
+rows via the runner.
+
+Run: ``PYTHONPATH=src python benchmarks/lifecycle_bench.py [--n 16] [--dim 4096]``
+or via the runner: ``PYTHONPATH=src python -m benchmarks.run lifecycle``
+(quick scale).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.engine import StorageEngine
+
+
+def _models(n: int, dim: int, rng: np.random.Generator):
+    """Half 'keep' (a base + fine-tunes sharing its vertices), half 'drop'
+    (dissimilar models that exclusively own their base vertices)."""
+    base = {
+        "w0": rng.normal(0, 0.02, dim).astype(np.float32),
+        "w1": rng.normal(0, 0.02, dim).astype(np.float32),
+    }
+    keep = {"keep0": base}
+    for i in range(1, (n + 1) // 2):
+        keep[f"keep{i}"] = {
+            k: v + rng.normal(0, 1e-5, v.shape).astype(np.float32)
+            for k, v in base.items()
+        }
+    drop = {
+        f"drop{i}": {
+            "w0": rng.normal(0, 5.0, dim).astype(np.float32),
+            "w1": rng.normal(0, 5.0, dim).astype(np.float32),
+        }
+        for i in range(n // 2)
+    }
+    return keep, drop
+
+
+def run_bench(n: int = 16, dim: int = 4096, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    keep, drop = _models(n, dim, rng)
+    with tempfile.TemporaryDirectory() as root:
+        eng = StorageEngine(root)
+        save_s = []
+        for name, tensors in {**keep, **drop}.items():
+            save_s.append(eng.save_model(name, {}, tensors).seconds)
+        before = eng.storage_bytes()
+        snapshots = {name: eng.load_model(name).materialize() for name in keep}
+
+        t0 = time.perf_counter()
+        for name in drop:
+            eng.delete_model(name)
+        delete_s = time.perf_counter() - t0
+        after_delete = eng.storage_bytes()
+
+        t0 = time.perf_counter()
+        report = eng.vacuum(min_dead_fraction=0.0)
+        vacuum_s = time.perf_counter() - t0
+        after_vacuum = eng.storage_bytes()
+
+        parity = True
+        for name, snap in snapshots.items():
+            out = eng.load_model(name).materialize()
+            parity &= all(np.array_equal(out[k], snap[k]) for k in snap)
+
+        t0 = time.perf_counter()
+        eng2 = StorageEngine(root)
+        reopen_s = time.perf_counter() - t0
+        parity &= sorted(eng2.list_models()) == sorted(keep)
+
+    return {
+        "config": {"n_models": n, "dim": dim, "seed": seed},
+        "save_s_total": sum(save_s),
+        "delete": {
+            "n": len(drop),
+            "seconds": delete_s,
+            "per_model_s": delete_s / max(len(drop), 1),
+        },
+        "vacuum": {
+            "seconds": vacuum_s,
+            "vertices_dropped": report["vertices_dropped"],
+            "pages_rewritten": report["pages_rewritten"],
+        },
+        "bytes": {
+            "before": before,
+            "after_delete": after_delete,
+            "after_vacuum": after_vacuum,
+            "reclaimed_pages": before["pages"] - after_vacuum["pages"],
+            "reclaimed_index": before["index"] - after_vacuum["index"],
+            "reclaimed_total": before["total"] - after_vacuum["total"],
+        },
+        "post_vacuum_load_parity": bool(parity),
+        "reopen_s": reopen_s,
+    }
+
+
+def run(csv):
+    """Runner entry point (quick scale, CSV convention)."""
+    res = run_bench(n=8, dim=1024)
+    d, v, b = res["delete"], res["vacuum"], res["bytes"]
+    csv.add("lifecycle/delete_model", d["per_model_s"] * 1e6,
+            f"n={d['n']}")
+    csv.add("lifecycle/vacuum", v["seconds"] * 1e6,
+            f"dropped={v['vertices_dropped']},pages_rw={v['pages_rewritten']}")
+    csv.add("lifecycle/reclaimed_bytes", b["reclaimed_total"],
+            f"pages={b['reclaimed_pages']},index={b['reclaimed_index']}")
+    csv.add("lifecycle/reopen", res["reopen_s"] * 1e6,
+            f"parity={res['post_vacuum_load_parity']}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=16)
+    ap.add_argument("--dim", type=int, default=4096)
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_lifecycle.json"))
+    args = ap.parse_args()
+    res = run_bench(n=args.n, dim=args.dim)
+    res["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S")
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+    b, v = res["bytes"], res["vacuum"]
+    print(f"saved {args.n} models ({res['save_s_total']:.2f}s), "
+          f"deleted {res['delete']['n']} ({res['delete']['seconds']:.3f}s)")
+    print(f"vacuum: {v['seconds']:.3f}s, dropped {v['vertices_dropped']} "
+          f"vertices, rewrote {v['pages_rewritten']} pages")
+    print(f"reclaimed: pages {b['reclaimed_pages']}, index "
+          f"{b['reclaimed_index']}, total {b['reclaimed_total']} "
+          f"({b['before']['total']} -> {b['after_vacuum']['total']})")
+    print(f"post-vacuum load parity: {res['post_vacuum_load_parity']}")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

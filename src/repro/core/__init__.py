@@ -1,5 +1,6 @@
 """NeurStore core: tensor-based storage engine, delta quantization, loader."""
 
+from .catalog import Catalog, CatalogState, ModelEntry
 from .engine import DEFAULT_TAU, DEFAULT_TOLERANCE, SaveReport, StorageEngine
 from .hnsw import HNSWIndex, quantized_l2_batch
 from .loader import LoadedModel, PipelineLoader, reconstruct_jnp
@@ -14,9 +15,12 @@ from .quantize import (
 )
 
 __all__ = [
+    "Catalog",
+    "CatalogState",
     "DEFAULT_TAU",
     "DEFAULT_TOLERANCE",
     "HNSWIndex",
+    "ModelEntry",
     "LoadedModel",
     "PipelineLoader",
     "QuantMeta",

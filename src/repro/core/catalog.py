@@ -1,0 +1,312 @@
+"""Transactional model catalog — typed metadata + write-ahead journal.
+
+The catalog is the database half of the storage engine: it owns the model
+table (name → :class:`ModelEntry`), the monotonic model-id counter, and the
+``vertex_refs`` reference counts that tie tensor-page records to HNSW base
+vertices. It replaces the seed's untyped ``_meta`` dict-poking with typed
+records plus a crash-recovery protocol (DLRDB/MorphingDB treat model
+insert/update/drop as first-class transactional operations; so do we).
+
+Durability model
+----------------
+
+* **Snapshot** — ``meta.json`` is the authoritative catalog state, written
+  atomically via ``os.replace``. A model exists iff its committed entry is
+  in the snapshot; ``vertex_refs`` live in the same snapshot, so a model's
+  entry and its reference counts commit in one atomic step. The file format
+  is a superset of the seed's ``meta.json`` (old stores load unchanged).
+* **Journal** — ``journal.jsonl`` is a write-ahead intent log. Every
+  lifecycle operation appends an *intent* record (fsync'd) **before** any
+  page/index side effect, and a ``commit`` record after the snapshot has
+  been replaced and all side effects are durable. On open,
+  :meth:`Catalog.pending` returns intents with no commit record; the engine
+  replays them — rolling an interrupted operation forward (snapshot already
+  switched) or back (snapshot untouched), so a crash at any point leaves no
+  orphan pages and no dangling ``vertex_refs``. Commits remove only their
+  own transaction's records, so an operation that failed *in-process*
+  (exception, not crash) keeps its recovery records pending until the next
+  open replays them.
+
+Record shapes (all JSON, one object per line; see ``docs/lifecycle.md``):
+
+* ``{"tx", "op": "save",    "name", "id", "page", "new_vertices"}``
+* ``{"tx", "op": "delete",  "name", "id", "page", "refs"}``
+* ``{"tx", "op": "replace", "name", "id", "page", "new_vertices",
+  "old_id", "old_page", "old_refs"}``
+* ``{"tx", "op": "vacuum",        "dim", "pages"}``
+* ``{"tx", "op": "vacuum_switch", "dim", "index", "pages", "refs"}``
+* ``{"tx", "op": "commit"}``
+
+``refs``/``old_refs`` are ``[[dim, vertex_id, count], …]`` (the references
+the model held); ``new_vertices`` is ``[[dim, vertex_id], …]`` (vertices
+first created by the interrupted save). ``vacuum_switch.refs`` is the full
+post-remap ``{vertex_id: count}`` map for the dim, recorded wholesale so
+roll-forward replay is idempotent.
+
+Fault injection: tests add point names to :data:`FAILPOINTS`;
+:func:`maybe_fail` raises :class:`InjectedCrash` at matching points inside
+the engine's lifecycle operations, simulating a crash between any two
+protocol steps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+__all__ = [
+    "Catalog",
+    "CatalogState",
+    "InjectedCrash",
+    "ModelEntry",
+    "STATUS_COMMITTED",
+    "STATUS_PENDING",
+    "FAILPOINTS",
+    "maybe_fail",
+]
+
+STATUS_COMMITTED = "committed"
+STATUS_PENDING = "pending"
+
+# ------------------------------------------------------------ fault injection
+FAILPOINTS: set[str] = set()
+
+
+class InjectedCrash(RuntimeError):
+    """Raised by :func:`maybe_fail` to simulate a crash mid-transaction."""
+
+
+def maybe_fail(point: str) -> None:
+    if point in FAILPOINTS:
+        raise InjectedCrash(point)
+
+
+# ------------------------------------------------------------- typed records
+@dataclasses.dataclass
+class ModelEntry:
+    """One catalog row: a stored model and where its page lives."""
+
+    model_id: int
+    name: str
+    architecture: dict
+    page: str
+    n_tensors: int
+    original_bytes: int
+    status: str = STATUS_COMMITTED
+
+    def __getitem__(self, key: str):
+        # Legacy dict-style access ("id", "page", ...) for pre-catalog callers.
+        if key == "id":
+            return self.model_id
+        return getattr(self, key)
+
+    def to_dict(self) -> dict:
+        return {
+            "id": self.model_id,
+            "architecture": self.architecture,
+            "page": self.page,
+            "n_tensors": self.n_tensors,
+            "original_bytes": self.original_bytes,
+            "status": self.status,
+        }
+
+    @classmethod
+    def from_dict(cls, name: str, d: dict) -> "ModelEntry":
+        return cls(
+            model_id=int(d["id"]),
+            name=name,
+            architecture=d.get("architecture", {}),
+            page=d["page"],
+            n_tensors=int(d.get("n_tensors", 0)),
+            original_bytes=int(d.get("original_bytes", 0)),
+            # Seed-format entries carry no status: they were only ever
+            # written after a completed save, i.e. committed.
+            status=d.get("status", STATUS_COMMITTED),
+        )
+
+
+@dataclasses.dataclass
+class CatalogState:
+    """In-memory catalog: model table, id counter, vertex reference counts."""
+
+    models: dict[str, ModelEntry] = dataclasses.field(default_factory=dict)
+    next_id: int = 0
+    vertex_refs: dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        return {
+            "models": {n: e.to_dict() for n, e in self.models.items()},
+            "next_id": self.next_id,
+            "vertex_refs": self.vertex_refs,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CatalogState":
+        return cls(
+            models={
+                n: ModelEntry.from_dict(n, e)
+                for n, e in d.get("models", {}).items()
+            },
+            next_id=int(d.get("next_id", 0)),
+            vertex_refs={k: int(v) for k, v in d.get("vertex_refs", {}).items()},
+        )
+
+
+def _ref_key(dim: int, vid: int) -> str:
+    return f"{dim}:{vid}"
+
+
+class Catalog:
+    """Snapshot + journal manager. All mutation goes through the engine lock."""
+
+    def __init__(self, root: str):
+        self.root = root
+        self.meta_path = os.path.join(root, "meta.json")
+        self.journal_path = os.path.join(root, "journal.jsonl")
+        self.state = CatalogState()
+        if os.path.exists(self.meta_path):
+            with open(self.meta_path) as f:
+                self.state = CatalogState.from_dict(json.load(f))
+        self._next_tx = 1
+
+    # ----------------------------------------------------------- model table
+    def get(self, name: str) -> ModelEntry | None:
+        return self.state.models.get(name)
+
+    def names(self, committed_only: bool = True) -> list[str]:
+        if not committed_only:
+            return list(self.state.models)
+        return [
+            n for n, e in self.state.models.items()
+            if e.status == STATUS_COMMITTED
+        ]
+
+    def allocate_id(self) -> int:
+        mid = self.state.next_id
+        self.state.next_id = mid + 1
+        return mid
+
+    # ------------------------------------------------------- reference counts
+    def ref_count(self, dim: int, vid: int) -> int:
+        return self.state.vertex_refs.get(_ref_key(dim, vid), 0)
+
+    def ref(self, dim: int, vid: int, delta: int = 1) -> int:
+        key = _ref_key(dim, vid)
+        refs = self.state.vertex_refs
+        n = refs.get(key, 0) + delta
+        if n > 0:
+            refs[key] = n
+        else:
+            refs.pop(key, None)
+        return n
+
+    def refs_for_dim(self, dim: int) -> dict[int, int]:
+        prefix = f"{dim}:"
+        return {
+            int(k[len(prefix):]): v
+            for k, v in self.state.vertex_refs.items()
+            if k.startswith(prefix)
+        }
+
+    def set_dim_refs(self, dim: int, refs: dict[int, int]) -> None:
+        """Replace every ref for ``dim`` wholesale (idempotent vacuum replay)."""
+        prefix = f"{dim}:"
+        table = self.state.vertex_refs
+        for k in [k for k in table if k.startswith(prefix)]:
+            del table[k]
+        for vid, count in refs.items():
+            if int(count) > 0:
+                table[_ref_key(dim, int(vid))] = int(count)
+
+    # --------------------------------------------------------------- snapshot
+    def save_snapshot(self) -> None:
+        """Atomically persist the catalog state — the transaction commit point."""
+        tmp = self.meta_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.state.to_dict(), f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self.meta_path)
+
+    def snapshot_dict(self) -> dict:
+        """Legacy ``_meta``-shaped read-only view of the catalog state."""
+        return self.state.to_dict()
+
+    # ---------------------------------------------------------------- journal
+    def _append(self, record: dict) -> None:
+        line = json.dumps(record, sort_keys=True) + "\n"
+        with open(self.journal_path, "a") as f:
+            f.write(line)
+            f.flush()
+            os.fsync(f.fileno())
+
+    def begin(self, record: dict) -> int:
+        """Append a write-intent record; returns its transaction id."""
+        tx = self._next_tx
+        self._next_tx += 1
+        self._append({"tx": tx, **record})
+        return tx
+
+    def log(self, tx: int, record: dict) -> None:
+        """Append a follow-up record (e.g. ``vacuum_switch``) for ``tx``."""
+        self._append({"tx": tx, **record})
+
+    def commit_tx(self, tx: int) -> None:
+        """Mark ``tx`` durable and drop its records from the journal.
+
+        Only committed transactions are removed: an earlier transaction
+        that *failed in-process* (exception, not crash) can leave a
+        pending intent — or a pending ``vacuum_switch`` roll-forward
+        record — that must survive until the next open replays it.
+        Truncating the whole file here would erase that recovery state.
+        """
+        self._append({"tx": tx, "op": "commit"})
+        remaining = self.pending()
+        if not remaining:
+            self.truncate_journal()
+            return
+        tmp = self.journal_path + ".tmp"
+        with open(tmp, "w") as f:
+            for group in remaining:
+                for rec in group:
+                    f.write(json.dumps(rec, sort_keys=True) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self.journal_path)
+
+    def truncate_journal(self) -> None:
+        with open(self.journal_path, "w") as f:
+            f.flush()
+            os.fsync(f.fileno())
+
+    def pending(self) -> list[list[dict]]:
+        """Uncommitted transactions from the journal, oldest first.
+
+        Each element is the ordered list of records sharing one ``tx`` (a
+        vacuum contributes up to two: intent + switch). A torn final line
+        (crash mid-append) is ignored: the intent never became durable, so
+        by protocol nothing after it happened.
+        """
+        if not os.path.exists(self.journal_path):
+            return []
+        with open(self.journal_path) as f:
+            lines = f.read().splitlines()
+        groups: dict[int, list[dict]] = {}
+        committed: set[int] = set()
+        for i, line in enumerate(lines):
+            if not line.strip():
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                if i == len(lines) - 1:
+                    break  # torn tail — never became durable
+                raise ValueError(f"corrupt catalog journal at line {i + 1}")
+            tx = int(rec.get("tx", 0))
+            self._next_tx = max(self._next_tx, tx + 1)
+            if rec.get("op") == "commit":
+                committed.add(tx)
+            else:
+                groups.setdefault(tx, []).append(rec)
+        return [recs for tx, recs in sorted(groups.items()) if tx not in committed]

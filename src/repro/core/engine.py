@@ -8,8 +8,9 @@ Components mirroring Figure 3:
   and reloaded on demand — paper §4.1 "Index Cache", §5 "32 GB default").
 * **Delta tensor storage** — read-only tensor pages, one per model, records
   ordered by the model architecture for locality (paper §4.1).
-* **Metadata storage** — model id/name → architecture + page path, the
-  library analogue of the paper's relational model table.
+* **Catalog** — the transactional model table (``repro.core.catalog``):
+  typed entries, monotonic model ids, vertex reference counts, and a
+  write-ahead journal that makes every lifecycle operation atomic.
 
 ``save_model`` is Algorithm 1 verbatim: decouple → per-tensor ANN search →
 delta encode → SHOULDCOMPRESS(δ) range-vs-τ check → (maybe) new vertex →
@@ -19,28 +20,58 @@ Save-pipeline hot path (this is the throughput-critical write side):
 
 * tensors are **grouped by flattened dim** so each HNSW index is fetched
   from the cache once per save instead of once per tensor;
-* only the index search/insert and metadata mutation run under the global
+* only the index search/insert and catalog mutation run under the global
   lock — delta quantization, planar bit-packing and page assembly happen
   outside it, so concurrent saves overlap their CPU-heavy encode work;
 * the index cache tracks a **dirty flag per index**: ``flush()`` (called at
   commit) reserializes only indexes that gained a vertex during this save.
-  The seed flushed every resident index on every save — O(total resident
-  index bytes) of pickling per save even when nothing changed.
+
+Model lifecycle (this is what makes the engine a catalog, not an archive):
+
+* ``delete_model`` / ``replace_model`` decrement ``vertex_refs``, unlink
+  the model's page, and tombstone base vertices whose reference count
+  drops to zero (the vertex stays in the graph as a waypoint until vacuum).
+* ``vacuum(min_dead_fraction=…)`` compacts each index past the dead-vertex
+  threshold: tombstones are dropped from the vertex arrays and adjacency,
+  surviving page records are rewritten with the old→new vertex-id remap,
+  and the reference table is renumbered — all under one journal
+  transaction, so a crash at any point rolls forward or back cleanly.
+* Every operation follows the same protocol: journal intent → physical
+  side effects → atomic catalog snapshot (the commit point) → cleanup →
+  journal commit. ``StorageEngine.__init__`` replays any interrupted
+  transaction, leaving no orphan pages and no dangling ``vertex_refs``.
+  See ``docs/lifecycle.md`` for the full state machine.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import json
 import os
 import threading
 import time
-from collections import OrderedDict
+import weakref
+from collections import Counter, OrderedDict
 
 import numpy as np
 
+from .catalog import (
+    STATUS_COMMITTED,
+    STATUS_PENDING,
+    Catalog,
+    ModelEntry,
+    maybe_fail,
+)
 from .hnsw import HNSWIndex
-from .pages import TensorPage, TensorRecord, encode_payload, read_page_header, write_page
+from .pages import (
+    TensorPage,
+    TensorRecord,
+    encode_payload,
+    read_page_header,
+    read_page_refs,
+    read_record,
+    remap_page_vertices,
+    write_page,
+)
 from .quantize import (
     dequantize_delta,
     quantize_delta,
@@ -73,6 +104,15 @@ class SaveReport:
         return float(np.mean(self.nbits)) if self.nbits else 0.0
 
 
+def _write_file_durable(path: str, data: bytes) -> None:
+    """Write + fsync: journaled operations need the file durable before the
+    record that references it becomes the commit point."""
+    with open(path, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+
+
 class _IndexCache:
     """LRU cache of deserialized HNSW indexes, bounded by bytes (paper §4.1).
 
@@ -82,6 +122,13 @@ class _IndexCache:
     progress **pins** the dims it is mutating so a concurrent load's
     ``get`` can never evict an index out from under the insert loop (a
     detached-but-still-mutating index would silently lose vertices).
+
+    Budget enforcement happens at two points: ``_evict`` (on ``get``)
+    spills least-recently-used indexes but always keeps the index being
+    handed to the caller resident, and ``trim`` (called by the engine at
+    commit boundaries, when no handle is outstanding) may spill *every*
+    unpinned index — including a single resident index larger than the
+    whole budget, which ``_evict`` alone could never reclaim.
     """
 
     def __init__(self, root: str, budget_bytes: int):
@@ -125,6 +172,17 @@ class _IndexCache:
         with self._lock:
             self._dirty.add(dim)
 
+    def mark_clean(self, dim: int) -> None:
+        """Resident index already matches disk (e.g. vacuum just wrote it)."""
+        with self._lock:
+            self._dirty.discard(dim)
+
+    def drop(self, dim: int) -> None:
+        """Discard a resident index without writing it (failed mutation)."""
+        with self._lock:
+            self._live.pop(dim, None)
+            self._dirty.discard(dim)
+
     def pin(self, dim: int) -> None:
         """Exempt ``dim`` from eviction while a save mutates it."""
         with self._lock:
@@ -139,8 +197,10 @@ class _IndexCache:
                 self._pins.pop(dim, None)
 
     def _write(self, dim: int, idx: HNSWIndex) -> None:
-        with open(self._path(dim), "wb") as f:
-            f.write(idx.to_bytes())
+        # fsync: the save protocol commits the catalog only after vertices
+        # are durable — a page must never reference a vertex the index
+        # file could lose in a power cut.
+        _write_file_durable(self._path(dim), idx.to_bytes())
 
     def _evict(self) -> None:
         while len(self._live) > 1 and self.resident_bytes() > self.budget:
@@ -156,6 +216,24 @@ class _IndexCache:
             if victim in self._dirty or not os.path.exists(self._path(victim)):
                 self._write(victim, idx)
                 self._dirty.discard(victim)
+
+    def trim(self) -> None:
+        """Enforce the byte budget with no outstanding handle (commit time).
+
+        Unlike ``_evict`` this may spill the sole resident index, closing
+        the gap where one index larger than the entire budget stayed
+        resident forever and its bytes were never reclaimed.
+        """
+        with self._lock:
+            while self._live and self.resident_bytes() > self.budget:
+                victim = next((d for d in self._live if d not in self._pins), None)
+                if victim is None:
+                    return
+                idx = self._live.pop(victim)
+                self.evictions += 1
+                if victim in self._dirty or not os.path.exists(self._path(victim)):
+                    self._write(victim, idx)
+                    self._dirty.discard(victim)
 
     def resident_bytes(self) -> int:
         return sum(i.nbytes for i in self._live.values())
@@ -209,27 +287,193 @@ class StorageEngine:
         self.tau = tau
         self.ef_search = ef_search
         self.index_cache = _IndexCache(os.path.join(root, "index"), cache_bytes)
-        self._meta_path = os.path.join(root, "meta.json")
-        self._meta: dict = {"models": {}, "next_id": 0, "vertex_refs": {}}
-        if os.path.exists(self._meta_path):
-            with open(self._meta_path) as f:
-                self._meta = json.load(f)
+        self.catalog = Catalog(root)
+        # (dim, vid) refs held by saves between ANN match and commit: keeps
+        # a concurrent delete/vacuum from tombstoning a base an in-flight
+        # page is about to reference.
+        self._inflight: Counter = Counter()
+        # Open LoadedModel handles: vacuum renumbers vertex ids, so it must
+        # patch the base references of every live handle or they would
+        # silently dequantize another model's base after compaction.
+        self._open_loaders: "weakref.WeakSet" = weakref.WeakSet()
+        # Dims whose vacuum failed in-process (not a crash): the on-disk
+        # index/pages/refs may be half-switched, so further use of the dim
+        # must fail loudly until a reopen replays the journal.
+        self._quarantined_dims: set[int] = set()
         self._lock = threading.RLock()
+        self._recover()
 
     # --------------------------------------------------------------- helpers
-    def _persist_meta(self) -> None:
-        tmp = self._meta_path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(self._meta, f)
-        os.replace(tmp, self._meta_path)  # atomic commit
+    @property
+    def _meta(self) -> dict:
+        """Legacy read-only view of the catalog (pre-catalog dict format)."""
+        return self.catalog.snapshot_dict()
+
+    def _page_file(self, page_name: str) -> str:
+        return os.path.join(self.root, "pages", page_name)
 
     def _page_path(self, model_id: int) -> str:
-        return os.path.join(self.root, "pages", f"model_{model_id}.page")
+        return self._page_file(f"model_{model_id}.page")
 
-    def _ref_vertex(self, dim: int, vid: int, delta: int = 1) -> None:
-        key = f"{dim}:{vid}"
-        refs = self._meta["vertex_refs"]
-        refs[key] = refs.get(key, 0) + delta
+    def _unlink(self, path: str) -> None:
+        try:
+            os.unlink(path)
+        except FileNotFoundError:
+            pass
+
+    def _page_refs(self, page_name: str) -> Counter:
+        """(dim, vertex_id) → count of records in a page (empty if missing).
+
+        Header-only scan (``read_page_refs``): lifecycle ops run this under
+        the engine lock, so it must not read whole page payloads.
+        """
+        path = self._page_file(page_name)
+        refs: Counter = Counter()
+        if not os.path.exists(path):
+            return refs
+        with open(path, "rb") as f:
+            for dim, vid in read_page_refs(f):
+                refs[(dim, vid)] += 1
+        return refs
+
+    def _check_quarantine(self, dim: int) -> None:
+        if dim in self._quarantined_dims:
+            raise RuntimeError(
+                f"dim {dim} has a half-applied vacuum (in-process failure); "
+                "reopen the engine to replay the journal"
+            )
+
+    def _tombstone_unreferenced(self, pairs) -> None:
+        """Tombstone vertices from ``pairs`` with zero live references."""
+        by_dim: dict[int, list[int]] = {}
+        for dim, vid in pairs:
+            if (
+                self.catalog.ref_count(dim, vid) <= 0
+                and self._inflight.get((dim, vid), 0) <= 0
+            ):
+                by_dim.setdefault(dim, []).append(vid)
+        for dim, vids in by_dim.items():
+            idx = self.index_cache.get(dim)
+            if idx is None:
+                continue
+            changed = False
+            for vid in vids:
+                # A crash can leave intents naming vertices that were never
+                # flushed; skip ids past the durable end of the index.
+                if 0 <= vid < len(idx) and not idx.is_deleted(vid):
+                    idx.mark_deleted(vid)
+                    changed = True
+            if changed:
+                self.index_cache.mark_dirty(dim)
+
+    # --------------------------------------------------------------- recovery
+    def _recover(self) -> None:
+        """Replay the catalog journal: roll interrupted operations forward
+        (catalog snapshot already switched) or back (snapshot untouched)."""
+        pending = self.catalog.pending()
+        dirty = self._drop_pending_entries()
+        for group in pending:
+            head = group[0]
+            op = head.get("op")
+            if op in ("save", "replace"):
+                self._recover_put(head)
+            elif op == "delete":
+                self._recover_delete(head)
+            elif op == "vacuum":
+                switch = next(
+                    (r for r in group if r.get("op") == "vacuum_switch"), None
+                )
+                if switch is None:
+                    self._recover_vacuum_rollback(head)
+                else:
+                    self._recover_vacuum_forward(switch)
+            dirty = True
+        if dirty:
+            self.index_cache.flush()
+            self.catalog.save_snapshot()
+        if pending:
+            self.catalog.truncate_journal()
+        self._sweep_orphan_pages()
+
+    def _sweep_orphan_pages(self) -> None:
+        """Unlink page files no committed entry references (post-replay the
+        journal is empty, so anything unreferenced is dead weight: garbage
+        from torn writes, or ``.vac`` side files a rollback left behind)."""
+        pages_dir = os.path.join(self.root, "pages")
+        referenced = {
+            self.catalog.state.models[n].page for n in self.catalog.state.models
+        }
+        for fname in os.listdir(pages_dir):
+            if fname in referenced:
+                continue
+            if fname.endswith(".vac") or (
+                fname.startswith("model_") and fname.endswith(".page")
+            ):
+                self._unlink(os.path.join(pages_dir, fname))
+
+    def _drop_pending_entries(self) -> bool:
+        """Defensive sweep: a snapshot should never hold non-committed
+        entries; if one appears (torn external edit), roll it back."""
+        changed = False
+        for name in list(self.catalog.state.models):
+            entry = self.catalog.state.models[name]
+            if entry.status == STATUS_COMMITTED:
+                continue
+            refs = self._page_refs(entry.page)
+            del self.catalog.state.models[name]
+            for (dim, vid), c in refs.items():
+                self.catalog.ref(dim, vid, -c)
+            self._tombstone_unreferenced(refs)
+            self._unlink(self._page_file(entry.page))
+            changed = True
+        return changed
+
+    def _recover_put(self, rec: dict) -> None:
+        entry = self.catalog.get(rec["name"])
+        if entry is not None and entry.model_id == rec["id"]:
+            # Snapshot switched before the crash: the save committed. For a
+            # replace, finish dropping the old version's remains.
+            if rec["op"] == "replace":
+                old_refs = [(int(d), int(v)) for d, v, _c in rec.get("old_refs", [])]
+                self._tombstone_unreferenced(old_refs)
+                if rec.get("old_page"):
+                    self._unlink(self._page_file(rec["old_page"]))
+            return
+        # Snapshot never switched: undo the physical side effects.
+        self._unlink(self._page_file(rec["page"]))
+        new_pairs = [(int(d), int(v)) for d, v in rec.get("new_vertices", [])]
+        self._tombstone_unreferenced(new_pairs)
+
+    def _recover_delete(self, rec: dict) -> None:
+        entry = self.catalog.get(rec["name"])
+        if entry is not None and entry.model_id == rec["id"]:
+            return  # intent never committed — the model is untouched
+        refs = [(int(d), int(v)) for d, v, _c in rec.get("refs", [])]
+        self._tombstone_unreferenced(refs)
+        self._unlink(self._page_file(rec["page"]))
+
+    def _recover_vacuum_rollback(self, rec: dict) -> None:
+        dim = rec["dim"]
+        self._unlink(self.index_cache._path(dim) + ".vac")
+        for page_name in rec.get("pages", []):
+            self._unlink(self._page_file(page_name) + ".vac")
+
+    def _recover_vacuum_forward(self, switch: dict) -> None:
+        dim = switch["dim"]
+        # An earlier replay step may have loaded the pre-compaction index
+        # into the cache (and marked it dirty); drop it so the final flush
+        # cannot clobber the compacted file we are about to install.
+        self.index_cache.drop(dim)
+        vac = self.index_cache._path(dim) + ".vac"
+        if os.path.exists(vac):
+            os.replace(vac, self.index_cache._path(dim))
+        for page_name in switch.get("pages", []):
+            pvac = self._page_file(page_name) + ".vac"
+            if os.path.exists(pvac):
+                os.replace(pvac, self._page_file(page_name))
+        self.catalog.set_dim_refs(
+            dim, {int(v): int(c) for v, c in switch.get("refs", {}).items()}
+        )
 
     # ----------------------------------------------------------- save (Alg 1)
     def save_model(
@@ -251,6 +495,10 @@ class StorageEngine:
         index) and runs under the engine lock; the CPU-heavy delta
         quantization + planar bit-packing run after the lock is released.
         Page records keep the original tensor order regardless of grouping.
+
+        Saving under an existing name is a **replace**: the new version is
+        written first, then the old page and its vertex references are
+        dropped, all under one journal transaction.
         """
         t0 = time.perf_counter()
         p = self.tolerance if tolerance is None else tolerance
@@ -271,77 +519,132 @@ class StorageEngine:
         # upcast lives only for its own search/insert; only the delta
         # survives the loop.
         bases: list[tuple[int, np.ndarray] | None] = [None] * len(items)
+        refs: Counter = Counter()
+        new_vertices: list[tuple[int, int]] = []
         n_new = 0
-        for dim in by_dim:
-            self.index_cache.pin(dim)
         try:
-            with self._lock:
-                for dim, positions in by_dim.items():
-                    index = self.index_cache.get(dim, create=True)
-                    for pos in positions:
-                        flat = np.asarray(items[pos][2], dtype=np.float64).ravel()
-                        # (2) ANN search for the closest base tensor.
-                        hit = index.search(flat, k=1, ef=self.ef_search)
-                        vid = hit[0][1] if hit else -1
-                        if vid >= 0:
-                            base = index.dequantize_vertex(vid)
-                            delta = flat - base
-                        else:
-                            delta = None
-                        # (3) SHOULDCOMPRESS: range-of-delta vs tau (§4.2).
-                        if delta is None or float(delta.max() - delta.min()) > tau_:
-                            # New vertex: quantize t to 8-bit, insert,
-                            # recompute delta against its own de-quantized
-                            # representation.
-                            vid = index.insert(flat)
-                            self.index_cache.mark_dirty(dim)
-                            base = index.dequantize_vertex(vid)
-                            delta = flat - base
-                            n_new += 1
-                        bases[pos] = (vid, delta)
-                        self._ref_vertex(dim, vid)
-        finally:
             for dim in by_dim:
-                self.index_cache.unpin(dim)
+                self.index_cache.pin(dim)
+            try:
+                with self._lock:
+                    for dim, positions in by_dim.items():
+                        self._check_quarantine(dim)
+                        index = self.index_cache.get(dim, create=True)
+                        for pos in positions:
+                            flat = np.asarray(
+                                items[pos][2], dtype=np.float64
+                            ).ravel()
+                            # (2) ANN search for the closest (live) base.
+                            hit = index.search(flat, k=1, ef=self.ef_search)
+                            vid = hit[0][1] if hit else -1
+                            if vid >= 0:
+                                base = index.dequantize_vertex(vid)
+                                delta = flat - base
+                            else:
+                                delta = None
+                            # (3) SHOULDCOMPRESS: delta range vs tau (§4.2).
+                            if delta is None or float(delta.max() - delta.min()) > tau_:
+                                # New vertex: quantize t to 8-bit, insert,
+                                # recompute delta against its own
+                                # de-quantized representation.
+                                vid = index.insert(flat)
+                                self.index_cache.mark_dirty(dim)
+                                base = index.dequantize_vertex(vid)
+                                delta = flat - base
+                                new_vertices.append((dim, vid))
+                                n_new += 1
+                            bases[pos] = (vid, delta)
+                            refs[(dim, vid)] += 1
+                            # Hold the ref until commit so a concurrent
+                            # delete cannot tombstone this base under the
+                            # page.
+                            self._inflight[(dim, vid)] += 1
+            finally:
+                for dim in by_dim:
+                    self.index_cache.unpin(dim)
 
-        # Phase 2 (unlocked): adaptive n-bit quantization of each delta
-        # (Eq. 2/3) + planar bit-packing + page assembly, in tensor order.
-        # Deltas are released as they are consumed.
-        records: list[TensorRecord] = []
-        nbits: list[int] = []
-        for i, (tname, shape, src) in enumerate(items):
-            vid, delta = bases[i]
-            bases[i] = None
-            qd, meta = quantize_delta(delta, p)
-            nbits.append(meta.nbit)
-            rec = TensorRecord(
-                name=tname,
-                shape=shape,
-                dim_key=src.size,
-                vertex_id=vid,
-                meta=meta,
-                qdelta=qd,
-            )
-            rec.payload = encode_payload(rec)
-            records.append(rec)
-        page = write_page(records)
+            # Phase 2 (unlocked): adaptive n-bit quantization of each delta
+            # (Eq. 2/3) + planar bit-packing + page assembly, in tensor
+            # order. Deltas are released as they are consumed.
+            records: list[TensorRecord] = []
+            nbits: list[int] = []
+            for i, (tname, shape, src) in enumerate(items):
+                vid, delta = bases[i]
+                bases[i] = None
+                qd, meta = quantize_delta(delta, p)
+                nbits.append(meta.nbit)
+                rec = TensorRecord(
+                    name=tname,
+                    shape=shape,
+                    dim_key=src.size,
+                    vertex_id=vid,
+                    meta=meta,
+                    qdelta=qd,
+                )
+                rec.payload = encode_payload(rec)
+                records.append(rec)
+            page = write_page(records)
 
-        # Phase 3 (locked): durable commit — page file, metadata, dirty
-        # indexes only.
-        with self._lock:
-            model_id = self._meta["next_id"]
-            self._meta["next_id"] = model_id + 1
-            with open(self._page_path(model_id), "wb") as f:
-                f.write(page)
-            self._meta["models"][name] = {
-                "id": model_id,
-                "architecture": architecture,
-                "page": os.path.basename(self._page_path(model_id)),
-                "n_tensors": len(records),
-                "original_bytes": original_bytes,
-            }
-            self._persist_meta()
-            self.index_cache.flush()
+            # Phase 3 (locked): the journaled commit. Intent → index flush
+            # (vertices durable before the page references them) → page
+            # write → atomic catalog snapshot (commit point) → old-version
+            # cleanup → journal commit.
+            with self._lock:
+                old = self.catalog.get(name)
+                old_refs = self._page_refs(old.page) if old else Counter()
+                model_id = self.catalog.allocate_id()
+                page_name = f"model_{model_id}.page"
+                intent = {
+                    "op": "replace" if old else "save",
+                    "name": name,
+                    "id": model_id,
+                    "page": page_name,
+                    "new_vertices": [[d, v] for d, v in new_vertices],
+                }
+                if old:
+                    intent["old_id"] = old.model_id
+                    intent["old_page"] = old.page
+                    intent["old_refs"] = [
+                        [d, v, c] for (d, v), c in old_refs.items()
+                    ]
+                tx = self.catalog.begin(intent)
+                maybe_fail("save.after_intent")
+                self.index_cache.flush()
+                maybe_fail("save.after_index_flush")
+                _write_file_durable(self._page_file(page_name), page)
+                maybe_fail("save.after_page_write")
+                entry = ModelEntry(
+                    model_id=model_id,
+                    name=name,
+                    architecture=architecture,
+                    page=page_name,
+                    n_tensors=len(records),
+                    original_bytes=original_bytes,
+                    status=STATUS_PENDING,
+                )
+                self.catalog.state.models[name] = entry
+                for (dim, vid), c in refs.items():
+                    self.catalog.ref(dim, vid, c)
+                if old:
+                    for (dim, vid), c in old_refs.items():
+                        self.catalog.ref(dim, vid, -c)
+                entry.status = STATUS_COMMITTED
+                self.catalog.save_snapshot()  # ← commit point
+                maybe_fail("save.after_snapshot")
+                if old:
+                    self._tombstone_unreferenced(old_refs)
+                    self.index_cache.flush()
+                    self._unlink(self._page_file(old.page))
+                self.catalog.commit_tx(tx)
+                self.index_cache.trim()
+        finally:
+            with self._lock:
+                for pair, c in refs.items():
+                    left = self._inflight[pair] - c
+                    if left > 0:
+                        self._inflight[pair] = left
+                    else:
+                        del self._inflight[pair]
         return SaveReport(
             model_id=model_id,
             name=name,
@@ -354,23 +657,211 @@ class StorageEngine:
             seconds=time.perf_counter() - t0,
         )
 
+    # -------------------------------------------------------------- lifecycle
+    def delete_model(self, name: str) -> None:
+        """Drop a model: journal intent → catalog commit → tombstone
+        zero-ref vertices → unlink page. Crash-safe at every step."""
+        with self._lock:
+            entry = self.catalog.get(name)
+            if entry is None or entry.status != STATUS_COMMITTED:
+                raise KeyError(name)
+            refs = self._page_refs(entry.page)
+            for dim, _vid in refs:
+                self._check_quarantine(dim)
+            tx = self.catalog.begin({
+                "op": "delete",
+                "name": name,
+                "id": entry.model_id,
+                "page": entry.page,
+                "refs": [[d, v, c] for (d, v), c in refs.items()],
+            })
+            maybe_fail("delete.after_intent")
+            del self.catalog.state.models[name]
+            for (dim, vid), c in refs.items():
+                self.catalog.ref(dim, vid, -c)
+            self.catalog.save_snapshot()  # ← commit point
+            maybe_fail("delete.after_snapshot")
+            self._tombstone_unreferenced(refs)
+            self.index_cache.flush()
+            maybe_fail("delete.after_index_flush")
+            self._unlink(self._page_file(entry.page))
+            self.catalog.commit_tx(tx)
+
+    def replace_model(
+        self,
+        name: str,
+        architecture: dict,
+        tensors: "OrderedDict[str, np.ndarray] | dict[str, np.ndarray]",
+        tolerance: float | None = None,
+        tau: float | None = None,
+    ) -> SaveReport:
+        """Save a new version of an existing model and drop the old one
+        under a single journal transaction (save-new-then-drop-old)."""
+        # Hold the (reentrant) lock across the save so a concurrent delete
+        # cannot void the existence check and silently turn the replace
+        # into a fresh save.
+        with self._lock:
+            if self.catalog.get(name) is None:
+                raise KeyError(name)
+            return self.save_model(name, architecture, tensors, tolerance, tau)
+
+    def vacuum(self, min_dead_fraction: float = 0.0, dims=None) -> dict:
+        """Compact indexes whose dead-vertex fraction is ≥ the threshold.
+
+        Per dim: sweep (any vertex with zero catalog references becomes a
+        tombstone) → journal intent → ``HNSWIndex.compact()`` → write the
+        compacted index and every remapped page as ``.vac`` side files →
+        journal the switch record (with the full post-remap reference
+        table) → atomically swap the side files in → commit. Mid-vacuum
+        crashes roll forward from the switch record or roll back by
+        discarding side files. Every surviving model materializes
+        bit-identically before vs. after (vertex codes are copied verbatim
+        and page payloads are untouched).
+
+        Returns a report: per-dim dropped/live counts, pages rewritten,
+        and dims skipped because an in-flight save holds references.
+        """
+        report: dict = {
+            "dims": {},
+            "skipped_dims": [],
+            "vertices_dropped": 0,
+            "pages_rewritten": 0,
+        }
+        with self._lock:
+            # One scan per page for the whole vacuum: which dims each page
+            # references never changes (rewrites only renumber vertices).
+            dims_by_page: dict[str, set[int]] = {
+                entry.page: {d for d, _ in self._page_refs(entry.page)}
+                for entry in (self.catalog.get(n) for n in self.catalog.names())
+            }
+            for dim in (dims if dims is not None else self.index_cache.dims()):
+                if (
+                    dim in self._quarantined_dims
+                    or any(pair[0] == dim for pair in self._inflight)
+                ):
+                    report["skipped_dims"].append(dim)
+                    continue
+                idx = self.index_cache.get(dim)
+                if idx is None or len(idx) == 0:
+                    continue
+                self.index_cache.pin(dim)
+                try:
+                    self._vacuum_dim(dim, idx, min_dead_fraction, report,
+                                     dims_by_page)
+                except BaseException:
+                    # The on-disk state may be half-switched and the journal
+                    # still holds the recovery records: drop the resident
+                    # object and quarantine the dim until a reopen replays.
+                    self.index_cache.drop(dim)
+                    self._quarantined_dims.add(dim)
+                    raise
+                finally:
+                    self.index_cache.unpin(dim)
+            self.index_cache.flush()
+            self.index_cache.trim()
+        return report
+
+    def _vacuum_dim(
+        self,
+        dim: int,
+        idx: HNSWIndex,
+        min_dead_fraction: float,
+        report: dict,
+        dims_by_page: dict[str, set[int]],
+    ) -> None:
+        refs = self.catalog.refs_for_dim(dim)
+        # Sweep: liveness is defined by the reference table, so orphan
+        # vertices from crashed saves are collected here too.
+        for vid in range(len(idx)):
+            if refs.get(vid, 0) <= 0 and not idx.is_deleted(vid):
+                idx.mark_deleted(vid)
+                self.index_cache.mark_dirty(dim)
+        dead = idx.dead_count
+        if dead == 0 or idx.dead_fraction() < min_dead_fraction:
+            return
+        affected = [
+            entry
+            for entry in (
+                self.catalog.get(n) for n in self.catalog.names()
+            )
+            if dim in dims_by_page.get(entry.page, ())
+        ]
+        tx = self.catalog.begin({
+            "op": "vacuum",
+            "dim": dim,
+            "pages": [e.page for e in affected],
+        })
+        maybe_fail("vacuum.after_intent")
+        remap = idx.compact()
+        _write_file_durable(self.index_cache._path(dim) + ".vac", idx.to_bytes())
+        rewritten: list[str] = []
+        for entry in affected:
+            with open(self._page_file(entry.page), "rb") as f:
+                buf = f.read()
+            new_buf, changed = remap_page_vertices(buf, remap, dim)
+            if changed:
+                _write_file_durable(self._page_file(entry.page) + ".vac", new_buf)
+                rewritten.append(entry.page)
+        maybe_fail("vacuum.after_sidefiles")
+        new_refs = {str(remap[v]): c for v, c in refs.items() if c > 0}
+        self.catalog.log(tx, {
+            "op": "vacuum_switch",
+            "dim": dim,
+            "pages": rewritten,
+            "refs": new_refs,
+        })
+        maybe_fail("vacuum.after_switch_log")
+        os.replace(self.index_cache._path(dim) + ".vac", self.index_cache._path(dim))
+        maybe_fail("vacuum.mid_switch")
+        for page_name in rewritten:
+            os.replace(
+                self._page_file(page_name) + ".vac", self._page_file(page_name)
+            )
+        self.catalog.set_dim_refs(dim, {int(v): c for v, c in new_refs.items()})
+        self.catalog.save_snapshot()
+        self.catalog.commit_tx(tx)
+        # The resident object is exactly what was just written to disk.
+        self.index_cache.mark_clean(dim)
+        # Open handles hold old vertex ids — renumber them so they keep
+        # dequantizing the right base (a handle over a *deleted* model gets
+        # a poisoned id and fails loudly on next access).
+        for lm in list(self._open_loaders):
+            lm._apply_vertex_remap(dim, remap)
+        report["dims"][dim] = {
+            "dropped": dead,
+            "live": len(idx),
+            "pages_rewritten": len(rewritten),
+        }
+        report["vertices_dropped"] += dead
+        report["pages_rewritten"] += len(rewritten)
+
     # ------------------------------------------------------------------ load
-    def open_page(self, name: str) -> tuple[TensorPage, dict]:
-        info = self._meta["models"][name]
-        with open(os.path.join(self.root, "pages", info["page"]), "rb") as f:
+    def open_page(self, name: str) -> tuple[TensorPage, ModelEntry]:
+        with self._lock:
+            entry = self.catalog.get(name)
+            if entry is None or entry.status != STATUS_COMMITTED:
+                raise KeyError(name)
+            path = self._page_file(entry.page)
+        with open(path, "rb") as f:
             page = read_page_header(f.read())
-        return page, info
+        return page, entry
 
     def load_model(self, name: str, bits: int | None = None):
         """Compression-aware load — see :mod:`repro.core.loader`."""
         from .loader import LoadedModel
 
-        page, info = self.open_page(name)
-        return LoadedModel(engine=self, page=page, info=info, bits=bits)
+        page, entry = self.open_page(name)
+        lm = LoadedModel(engine=self, page=page, info=entry, bits=bits)
+        with self._lock:
+            self._open_loaders.add(lm)
+        return lm
 
     # ------------------------------------------------------------ accounting
     def list_models(self) -> list[str]:
-        return list(self._meta["models"].keys())
+        return self.catalog.names()
+
+    def model_info(self, name: str) -> ModelEntry | None:
+        return self.catalog.get(name)
 
     def storage_bytes(self) -> dict:
         """Total storage split: pages vs index (paper Fig. 10a breakdown).
@@ -380,13 +871,14 @@ class StorageEngine:
         """
         with self._lock:
             pages = sum(
-                os.path.getsize(os.path.join(self.root, "pages", m["page"]))
-                for m in self._meta["models"].values()
+                os.path.getsize(self._page_file(self.catalog.get(n).page))
+                for n in self.catalog.names()
             )
             self.index_cache.flush()
             index = sum(
                 os.path.getsize(os.path.join(self.root, "index", f))
                 for f in os.listdir(os.path.join(self.root, "index"))
+                if f.endswith(".idx")
             )
         return {"pages": pages, "index": index, "total": pages + index}
 
@@ -396,21 +888,20 @@ class StorageEngine:
         Paper §6.3.2: "evenly distribute the storage cost of each base tensor
         in the index across all tensors that reference it".
         """
-        page, info = self.open_page(name)
-        total = float(os.path.getsize(os.path.join(self.root, "pages", info["page"])))
-        refs = self._meta["vertex_refs"]
-        from .pages import read_record
-
+        page, entry = self.open_page(name)
+        total = float(os.path.getsize(self._page_file(entry.page)))
         for i in range(page.n_records):
             rec = read_record(page, i, with_payload=False)
-            share = refs.get(f"{rec.dim_key}:{rec.vertex_id}", 1)
+            share = self.catalog.ref_count(rec.dim_key, rec.vertex_id)
             # 8-bit base codes + graph overhead approximated by codes size.
             total += rec.numel / max(share, 1)
         return total
 
     def reconstruct_tensor(self, rec: TensorRecord) -> np.ndarray:
         """Full reconstruction: de-quantized base + de-quantized delta."""
-        index = self.index_cache.get(rec.dim_key)
-        base = index.dequantize_vertex(rec.vertex_id)
+        with self._lock:  # atomic vs vacuum's in-place index compaction
+            self._check_quarantine(rec.dim_key)
+            index = self.index_cache.get(rec.dim_key)
+            base = index.dequantize_vertex(rec.vertex_id)
         delta = dequantize_delta(rec.qdelta, rec.meta)
         return (base + delta).reshape(rec.shape).astype(np.float32)

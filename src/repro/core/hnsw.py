@@ -62,6 +62,23 @@ The traversal order and neighbor-selection logic are unchanged from the
 seed, so on fixed-seed workloads the rebuilt index returns the same
 neighbor ids (distances agree to fp rounding; see
 ``tests/test_hotpath.py``).
+
+Lifecycle support (model delete/replace → vertex GC):
+
+* **Tombstones** — :meth:`HNSWIndex.mark_deleted` excludes a vertex from
+  search *results* while keeping it as a graph waypoint (hnswlib's
+  deleted-markers): layer search still traverses dead vertices, it just
+  never admits them to the result heap. With no deletions the filtered
+  loop is behaviorally identical to the seed loop (the ``len(best) >= ef``
+  stop condition cannot bind earlier than the seed's non-empty check while
+  nothing is filtered), preserving oracle parity.
+* **Compaction** — :meth:`HNSWIndex.compact` drops dead vertices from the
+  vertex arrays and adjacency, first reconnecting each dead vertex's live
+  neighbors to each other (bounded edge contraction, shrink-by-distance)
+  so the graph stays navigable, and returns the old→new vertex-id remap
+  the engine applies to surviving page records. Vertex codes are copied
+  verbatim, so ``dequantize_vertex`` output for every surviving vertex is
+  bit-identical across compaction.
 """
 
 from __future__ import annotations
@@ -152,6 +169,9 @@ class HNSWIndex:
         # O(N) zeroing); a vertex is visited iff _vepoch[v] == _epoch.
         self._vepoch = np.zeros((0,), dtype=np.int64)
         self._epoch = 0
+        # Tombstones: dead vertices stay as graph waypoints but are
+        # excluded from search results until compact() drops them.
+        self._deleted = np.zeros((0,), dtype=bool)
         self._levels: list[int] = []
         # neighbors[layer][node] -> int64 ndarray of neighbor ids
         self._neighbors: list[dict[int, np.ndarray]] = []
@@ -175,6 +195,7 @@ class HNSWIndex:
             + self._mids.nbytes
             + self._norms.nbytes
             + self._cross.nbytes
+            + self._deleted.nbytes
             + edge_bytes
         )
 
@@ -186,11 +207,12 @@ class HNSWIndex:
         while cap < needed:
             cap *= 2
         for name in ("_codes", "_scales", "_zps", "_mids", "_norms", "_cross",
-                     "_vepoch"):
+                     "_vepoch", "_deleted"):
             old = getattr(self, name)
             shape = (cap, self.dim) if old.ndim == 2 else (cap,)
-            # _vepoch must be zero-filled: epoch stamps start at 1.
-            alloc = np.zeros if name == "_vepoch" else np.empty
+            # _vepoch must be zero-filled (epoch stamps start at 1) and
+            # _deleted false-filled (new rows are live).
+            alloc = np.zeros if name in ("_vepoch", "_deleted") else np.empty
             new = alloc(shape, dtype=old.dtype)
             new[: self._n] = old[: self._n]
             setattr(self, name, new)
@@ -211,6 +233,27 @@ class HNSWIndex:
         if meta.scale == 0.0:
             return np.full(self.dim, meta.mid, dtype=np.float64)
         return (codes.astype(np.float64) - meta.zero_point) * meta.scale
+
+    # ------------------------------------------------------------- tombstones
+    def mark_deleted(self, vid: int) -> None:
+        """Tombstone a vertex: excluded from search results, kept as waypoint."""
+        if not 0 <= vid < self._n:
+            raise IndexError(f"vertex {vid} out of range [0, {self._n})")
+        self._deleted[vid] = True
+
+    def is_deleted(self, vid: int) -> bool:
+        return bool(self._deleted[vid])
+
+    @property
+    def dead_count(self) -> int:
+        return int(self._deleted[: self._n].sum())
+
+    @property
+    def live_count(self) -> int:
+        return self._n - self.dead_count
+
+    def dead_fraction(self) -> float:
+        return self.dead_count / self._n if self._n else 0.0
 
     # ------------------------------------------------------------- distances
     def _distances(
@@ -252,24 +295,39 @@ class HNSWIndex:
         entry: list[int],
         ef: int,
         layer: int,
+        exclude_deleted: bool = False,
     ) -> list[tuple[float, int]]:
-        """Best-first search on one layer; returns ef closest (dist, id)."""
+        """Best-first search on one layer; returns ef closest (dist, id).
+
+        With ``exclude_deleted`` tombstoned vertices are traversed as
+        waypoints but never admitted to the result heap (hnswlib's
+        deleted-marker search). With the flag off — and whenever nothing
+        is filtered — the loop is behaviorally identical to the seed
+        implementation: until ``best`` holds ``ef`` elements it contains
+        every accepted candidate, so no remaining candidate can exceed its
+        maximum and the stop test cannot fire earlier than the seed's
+        ``best and d > -best[0][0]``.
+        """
         self._epoch += 1
         epoch = self._epoch
         visited = self._vepoch
+        dead = self._deleted
         entry_ids = np.asarray(entry, dtype=np.int64)
         visited[entry_ids] = epoch
         dists = self._distances(q32, qsq, qsum, entry_ids)
         cand: list[tuple[float, int]] = [(d, v) for d, v in zip(dists, entry)]
         heapq.heapify(cand)
-        best: list[tuple[float, int]] = [(-d, v) for d, v in zip(dists, entry)]
+        best: list[tuple[float, int]] = [
+            (-d, v) for d, v in zip(dists, entry)
+            if not (exclude_deleted and dead[v])
+        ]
         heapq.heapify(best)
         while len(best) > ef:
             heapq.heappop(best)
         adj = self._neighbors[layer]
         while cand:
             d, v = heapq.heappop(cand)
-            if best and d > -best[0][0]:
+            if len(best) >= ef and d > -best[0][0]:
                 break
             nbrs = adj.get(v)
             if nbrs is None or nbrs.size == 0:
@@ -279,18 +337,30 @@ class HNSWIndex:
                 continue
             visited[fresh] = epoch
             fd = self._distances(q32, qsq, qsum, fresh)
-            bound = -best[0][0]
+            bound = -best[0][0] if best else math.inf
             for du, u in zip(fd, fresh):
                 if len(best) < ef or du < bound:
                     heapq.heappush(cand, (du, u))
-                    heapq.heappush(best, (-du, u))
-                    if len(best) > ef:
-                        heapq.heappop(best)
-                    bound = -best[0][0]
+                    if not (exclude_deleted and dead[u]):
+                        heapq.heappush(best, (-du, u))
+                        if len(best) > ef:
+                            heapq.heappop(best)
+                        bound = -best[0][0]
         return sorted((-nd, int(v)) for nd, v in best)
 
-    def search(self, query: np.ndarray, k: int = 1, ef: int | None = None) -> list[tuple[float, int]]:
-        """Approximate k-NN of a float query; returns [(sq_dist, vertex_id)]."""
+    def search(
+        self,
+        query: np.ndarray,
+        k: int = 1,
+        ef: int | None = None,
+        exclude_deleted: bool = True,
+    ) -> list[tuple[float, int]]:
+        """Approximate k-NN of a float query; returns [(sq_dist, vertex_id)].
+
+        Tombstoned vertices are excluded from the results (but still guide
+        the descent); pass ``exclude_deleted=False`` to search the raw
+        graph. Returns ``[]`` when every reachable vertex is dead.
+        """
         if self._entry is None:
             return []
         ef = max(ef or self.ef_construction, k)
@@ -300,8 +370,11 @@ class HNSWIndex:
         qsum = float(q.sum())
         entry = [self._entry]
         for layer in range(self._max_level, 0, -1):
+            # Upper-layer descent keeps dead vertices: they are waypoints.
             entry = [self._search_layer(q32, qsq, qsum, entry, 1, layer)[0][1]]
-        return self._search_layer(q32, qsq, qsum, entry, ef, 0)[:k]
+        return self._search_layer(
+            q32, qsq, qsum, entry, ef, 0, exclude_deleted=exclude_deleted
+        )[:k]
 
     # ---------------------------------------------------------------- insert
     def _select_neighbors(self, cands: list[tuple[float, int]], m: int) -> list[int]:
@@ -373,6 +446,125 @@ class HNSWIndex:
             self._entry = vid
         return vid
 
+    # ------------------------------------------------------------ compaction
+    def compact(self) -> dict[int, int]:
+        """Drop tombstoned vertices; returns the old→new vertex-id remap.
+
+        Before any vertex is removed, the live neighbors of each dead
+        vertex are cross-linked (edge contraction, shrunk back to the
+        layer's degree cap by distance-to-endpoint) so that deleting a
+        waypoint does not disconnect the survivors. Vertex codes and
+        quantization metadata rows are copied verbatim, so
+        :meth:`dequantize_vertex` output for every surviving vertex is
+        bit-identical across compaction — the engine relies on this for
+        its vacuum parity bar.
+        """
+        n = self._n
+        dead = self._deleted[:n]
+        live_old = np.flatnonzero(~dead)
+        remap = {int(o): i for i, o in enumerate(live_old.tolist())}
+        if live_old.size == n:
+            return remap  # no tombstones — identity remap, nothing rebuilt
+
+        # 1) Edge contraction: connected components of dead vertices are
+        #    collapsed at once, so live regions bridged only by a *chain*
+        #    of dead waypoints stay connected (single-hop contraction
+        #    would strand them). Each component's full live boundary is
+        #    cross-linked, shrunk back to the degree cap by distance.
+        for layer, adj in enumerate(self._neighbors):
+            cap = self.m0 if layer == 0 else self.m
+            parent: dict[int, int] = {}
+
+            def _find(x: int) -> int:
+                while parent[x] != x:
+                    parent[x] = parent[parent[x]]
+                    x = parent[x]
+                return x
+
+            boundary: dict[int, set[int]] = {}
+            for v, nbrs in adj.items():
+                if not dead[v]:
+                    continue
+                parent.setdefault(v, v)
+                if not nbrs.size:
+                    continue
+                for u in nbrs[dead[nbrs]].tolist():
+                    parent.setdefault(u, u)
+                    ru, rv = _find(u), _find(v)
+                    if ru != rv:
+                        parent[ru] = rv
+            for v, nbrs in adj.items():
+                if not dead[v] or not nbrs.size:
+                    continue
+                live = nbrs[~dead[nbrs]]
+                if live.size:
+                    boundary.setdefault(_find(v), set()).update(live.tolist())
+            for live_set in boundary.values():
+                if len(live_set) < 2:
+                    continue
+                live_arr = np.fromiter(live_set, dtype=np.int64)
+                for u in live_set:
+                    extra = live_arr[live_arr != u]
+                    cur = adj.get(u, _EMPTY_IDS)
+                    if cur.size:
+                        cur = cur[~dead[cur]]
+                    merged = np.unique(np.concatenate([cur, extra]))
+                    merged = merged[merged != u]
+                    if merged.size > cap:
+                        base_u = self.dequantize_vertex(u)
+                        du = self._distances(
+                            base_u.astype(np.float32),
+                            float(np.dot(base_u, base_u)),
+                            float(base_u.sum()),
+                            merged,
+                        )
+                        merged = merged[np.argsort(du)[:cap]]
+                    adj[u] = merged.astype(np.int64)
+
+        # 2) Rebuild vertex arrays: copy surviving rows (codes verbatim).
+        nlive = int(live_old.size)
+        self._codes = self._codes[live_old]
+        self._scales = self._scales[live_old]
+        self._zps = self._zps[live_old]
+        self._mids = self._mids[live_old]
+        self._norms = self._norms[live_old]
+        self._cross = self._cross[live_old]
+        self._vepoch = np.zeros(nlive, dtype=np.int64)
+        self._epoch = 0
+        self._deleted = np.zeros(nlive, dtype=bool)
+        self._levels = [self._levels[int(o)] for o in live_old]
+        self._n = nlive
+        self._cap = nlive
+
+        # 3) Rebuild adjacency in the new id space, dropping dead vertices.
+        lut = np.full(n, -1, dtype=np.int64)
+        lut[live_old] = np.arange(nlive, dtype=np.int64)
+        new_layers: list[dict[int, np.ndarray]] = []
+        for adj in self._neighbors:
+            nl: dict[int, np.ndarray] = {}
+            for v, nbrs in adj.items():
+                if dead[v]:
+                    continue
+                if nbrs.size:
+                    mapped = lut[nbrs[~dead[nbrs]]].astype(np.int64)
+                else:
+                    mapped = _EMPTY_IDS
+                nl[int(lut[v])] = mapped
+            new_layers.append(nl)
+        while new_layers and not new_layers[-1]:
+            new_layers.pop()
+        self._neighbors = new_layers
+
+        # 4) New entry point: lowest-id survivor on the highest level.
+        if nlive == 0:
+            self._entry = None
+            self._max_level = -1
+            self._neighbors = []
+        else:
+            self._max_level = max(self._levels)
+            self._entry = self._levels.index(self._max_level)
+        return remap
+
     # ------------------------------------------------------------- serialize
     def to_bytes(self) -> bytes:
         n = self._n
@@ -385,6 +577,7 @@ class HNSWIndex:
             "zps": self._zps[:n].copy(),
             "mids": self._mids[:n].copy(),
             "norms": self._norms[:n].copy(),
+            "deleted": self._deleted[:n].copy(),
             "levels": self._levels,
             "neighbors": [
                 {int(k): v.tolist() for k, v in layer.items()}
@@ -415,6 +608,10 @@ class HNSWIndex:
                 state["codes"], idx._scales[:n], idx._zps[:n],
                 idx._mids[:n], idx.dim,
             )
+        deleted = state.get("deleted")
+        if deleted is not None:
+            # Pre-tombstone pickles carry no flags: every vertex is live.
+            idx._deleted[:n] = deleted
         # cross_i is derived (never serialized): s·z, or −mid on const rows.
         s = idx._scales[:n]
         cross = s * idx._zps[:n].astype(np.float64)

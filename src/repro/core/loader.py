@@ -13,8 +13,10 @@ Three paper mechanisms, adapted from ONNX-graph surgery to JAX:
   bit-planes of each delta payload from the page (true partial I/O) and
   widens the scale by ``2^(nbit-b)`` (Alg. 2 lines 6-8).
 * **Share-counted de-quantization** (§4.3.2) — base tensors referenced by
-  multiple records are de-quantized once; the share count drops per use and
-  the de-quantized copy is freed at zero.
+  multiple records are de-quantized once per materialization pass; a
+  per-pass countdown (reset when it drains, so repeated ``tensor()`` calls
+  or a second ``materialize()`` never go negative) frees the de-quantized
+  copy once every sharing record has consumed it.
 * **Pipelining** (§4.3.3) — :class:`PipelineLoader` overlaps page I/O,
   de-quantization and consumption in a 3-stage thread pipeline.
 """
@@ -28,7 +30,7 @@ from collections import Counter
 import numpy as np
 
 from .pages import TensorPage, TensorRecord, decode_payload, read_record, read_record_partial
-from .quantize import dequantize_delta
+from .quantize import dequantize_delta, dequantize_linear
 
 __all__ = ["LoadedModel", "PipelineLoader", "reconstruct_jnp"]
 
@@ -68,14 +70,17 @@ class LoadedModel:
             )
             self._records[rec.name] = rec
             self._order.append(rec.name)
-        # Share counts: how many records reference each base vertex.
+        # Share counts: how many records reference each base vertex. The
+        # immutable counts stay in _share; _remaining is the per-pass
+        # countdown that controls the cached de-quantized copy's lifetime.
         self._share = Counter((r.dim_key, r.vertex_id) for r in self._records.values())
+        self._remaining: dict[tuple[int, int], int] = dict(self._share)
         self._deq_base: dict[tuple[int, int], np.ndarray] = {}
 
     # ------------------------------------------------------------- metadata
     @property
     def architecture(self) -> dict:
-        return self.info["architecture"]
+        return self.info["architecture"]  # ModelEntry supports item access
 
     def tensor_names(self) -> list[str]:
         return list(self._order)
@@ -88,20 +93,70 @@ class LoadedModel:
     def record(self, name: str) -> TensorRecord:
         return self._ensure_decoded(self._records[name])
 
+    def _apply_vertex_remap(self, dim: int, remap: dict[int, int]) -> None:
+        """Engine callback after index compaction (vacuum): renumber this
+        handle's base references so it stays valid across the remap. A
+        record whose base was dropped — its model was deleted while this
+        handle stayed open — is poisoned with id -1 and raises on access.
+        """
+        changed = False
+        for rec in self._records.values():
+            if rec.dim_key == dim:
+                rec.vertex_id = remap.get(rec.vertex_id, -1)
+                changed = True
+        if not changed:
+            return
+
+        def rekey(d):
+            return {
+                (k if k[0] != dim else (dim, remap.get(k[1], -1))): v
+                for k, v in d.items()
+            }
+
+        self._share = Counter(rekey(self._share))
+        self._remaining = rekey(self._remaining)
+        self._deq_base = rekey(self._deq_base)
+
     # ------------------------------------------------- on-demand decompress
     def _base(self, rec: TensorRecord) -> np.ndarray:
-        """De-quantize a base tensor once; free when its share count drains."""
-        key = (rec.dim_key, rec.vertex_id)
-        if key in self._deq_base:
-            base = self._deq_base[key]
-        else:
-            index = self.engine.index_cache.get(rec.dim_key)
-            base = index.dequantize_vertex(rec.vertex_id)
-            if self._share[key] > 1:
+        """De-quantize a base once per pass; free when every sharer has read it.
+
+        The countdown resets to the full share count when it drains, so the
+        cache is correct across repeated ``tensor(name)`` calls and multiple
+        ``materialize()`` passes (the seed's one-shot drain counter went
+        negative and re-dequantized shared bases on every later access).
+        """
+        # The engine lock makes the id-read + codes-row fetch atomic
+        # against vacuum's in-place compaction (which moves rows and
+        # renumbers this handle's records); the O(dim) de-quantization
+        # itself runs outside the lock on a private copy of the row.
+        with self.engine._lock:
+            self.engine._check_quarantine(rec.dim_key)
+            if rec.vertex_id < 0:
+                raise KeyError(
+                    f"base of tensor {rec.name!r} was vacuumed away: the "
+                    "model was deleted while this handle was open"
+                )
+            base = self._deq_base.get((rec.dim_key, rec.vertex_id))
+            codes = meta = None
+            if base is None:
+                index = self.engine.index_cache.get(rec.dim_key)
+                codes, meta = index.vertex_codes(rec.vertex_id)
+                codes = codes.copy()  # row view into arrays compact() moves
+        if base is None:
+            base = dequantize_linear(codes, meta)
+        with self.engine._lock:
+            # Re-derive the key: a vacuum between the two critical sections
+            # may have renumbered the record (the base bytes are unchanged).
+            key = (rec.dim_key, rec.vertex_id)
+            if key not in self._deq_base and self._share.get(key, 0) > 1:
                 self._deq_base[key] = base
-        self._share[key] -= 1
-        if self._share[key] <= 0:
-            self._deq_base.pop(key, None)
+            left = self._remaining.get(key, 1) - 1
+            if left <= 0:
+                self._deq_base.pop(key, None)
+                self._remaining[key] = self._share.get(key, 1)  # rearm
+            else:
+                self._remaining[key] = left
         return base
 
     def tensor(self, name: str) -> np.ndarray:
@@ -127,8 +182,16 @@ class LoadedModel:
         out = {}
         for name in self._order:
             rec = self._ensure_decoded(self._records[name])
-            index = self.engine.index_cache.get(rec.dim_key)
-            codes, bmeta = index.vertex_codes(rec.vertex_id)
+            with self.engine._lock:  # atomic vs vacuum's in-place compact
+                self.engine._check_quarantine(rec.dim_key)
+                if rec.vertex_id < 0:
+                    raise KeyError(
+                        f"base of tensor {rec.name!r} was vacuumed away: "
+                        "the model was deleted while this handle was open"
+                    )
+                index = self.engine.index_cache.get(rec.dim_key)
+                codes, bmeta = index.vertex_codes(rec.vertex_id)
+                codes = codes.copy()
             # int8-safe recentring for the TPU kernels: uint8 codes c with
             # zero-point z dequantize identically as (c-128) with (z-128),
             # and (c-128) fits int8 exactly. Only valid when nbit <= 8 —

@@ -29,6 +29,7 @@ from .quantize import QuantMeta
 __all__ = [
     "TensorRecord", "TensorPage", "write_page", "read_page_header",
     "read_record", "read_record_partial", "encode_payload", "decode_payload",
+    "read_page_refs", "remap_page_vertices",
 ]
 
 _MAGIC = b"NSPG"
@@ -176,6 +177,62 @@ def read_record(page: TensorPage, i: int, with_payload: bool = True,
     o, l = page.offsets[i]
     return _decode_record(memoryview(page.buf)[o:o + l], with_payload=with_payload,
                           decode=decode)
+
+
+# Byte offset of the vertex_id field inside _REC_FIXED ("<H B q ...").
+_VERTEX_OFF = struct.calcsize("<HB")
+
+
+def read_page_refs(f) -> list[tuple[int, int]]:
+    """``(dim_key, vertex_id)`` per record, reading headers only.
+
+    The engine's lifecycle operations (delete/replace/vacuum) need a
+    page's base references but not its payloads; this seeks to each
+    record's fixed header instead of reading the whole file, so the cost
+    is O(records), not O(page bytes). ``f`` is an open binary file.
+    """
+    f.seek(0)
+    magic, version, n = _HDR.unpack(f.read(_HDR.size))
+    if magic != _MAGIC:
+        raise ValueError("not a NeurStore tensor page")
+    if version != _VERSION:
+        raise ValueError(f"unsupported tensor page version {version}")
+    table = f.read(_OFFSET.size * n)
+    refs = []
+    for i in range(n):
+        o, _l = _OFFSET.unpack_from(table, i * _OFFSET.size)
+        f.seek(o + _VERTEX_OFF)
+        vertex, dim = struct.unpack("<qQ", f.read(16))
+        refs.append((int(dim), int(vertex)))
+    return refs
+
+
+def remap_page_vertices(buf: bytes, remap: dict[int, int], dim_key: int) -> tuple[bytes, bool]:
+    """Patch base-vertex ids of every ``dim_key`` record in a page image.
+
+    Index compaction renumbers vertices; pages are read-only, so the engine
+    rewrites affected pages through the catalog journal. Only the 8-byte
+    ``vertex_id`` field of matching records is patched in place — names,
+    shapes, quantization metadata and bit-packed payloads are untouched, so
+    the rewritten page is byte-identical except for the remapped ids (the
+    vacuum parity bar rests on this).
+
+    Returns ``(new_buf, changed)``; raises ``KeyError`` if a record still
+    references a vertex the remap dropped (a dangling reference — the
+    caller must only compact vertices with zero catalog references).
+    """
+    page = read_page_header(buf)
+    out = bytearray(buf)
+    changed = False
+    for o, _l in page.offsets:
+        vertex, dim = struct.unpack_from("<qQ", buf, o + _VERTEX_OFF)
+        if dim != dim_key:
+            continue
+        nv = remap[vertex]
+        if nv != vertex:
+            struct.pack_into("<q", out, o + _VERTEX_OFF, nv)
+            changed = True
+    return bytes(out), changed
 
 
 def read_record_partial(page: TensorPage, i: int, bits: int,

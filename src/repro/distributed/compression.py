@@ -20,7 +20,6 @@ Usable two ways:
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,6 @@ with the compute of *i+1*.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ required to keep the dry-run memory analysis inside HBM.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax

@@ -12,7 +12,6 @@ residual add (pre-LN).
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

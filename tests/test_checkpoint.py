@@ -4,7 +4,6 @@ gradient compression."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_config

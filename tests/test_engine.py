@@ -1,7 +1,6 @@
 """Storage engine behaviour tests (Alg. 1 / Alg. 2, index cache, pages)."""
 
 import numpy as np
-import pytest
 
 from repro.core import (
     DEFAULT_TOLERANCE,

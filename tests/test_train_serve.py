@@ -2,9 +2,8 @@
 resumes exactly, the server generates from delta-compressed checkpoints."""
 
 import numpy as np
-import pytest
 
-from repro.configs import get_config
+
 from repro.launch.serve import ModelServer
 from repro.launch.train import Trainer
 from repro.models.config import ModelConfig
