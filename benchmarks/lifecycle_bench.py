@@ -11,15 +11,19 @@ subsystem:
 * **post-vacuum load parity** — every surviving model must ``materialize()``
   bit-identically to its pre-delete snapshot (the lifecycle parity bar);
 * **reopen** — engine restart over the vacuumed store (journal replay is a
-  no-op on a clean store, so this times catalog load only).
+  no-op on a clean store, so this times catalog load only);
+* **batched ingest** — the same model set saved through ONE
+  ``save_models`` transaction (one journal intent, one ``meta.json``
+  commit, cross-model dim grouping) vs the per-model ``save_model`` loop —
+  the checkpoint-sweep amortization of ISSUE 3.
 
-Writes ``BENCH_lifecycle.json`` at the repo root (the lifecycle point of
-the perf trajectory) and prints the usual ``name,us_per_call,derived`` CSV
-rows via the runner.
+Writes ``BENCH_lifecycle.json`` at the repo root (``schema_version``
+documents the layout the CI gate parses) and prints the usual
+``name,us_per_call,derived`` CSV rows via the runner.
 
-Run: ``PYTHONPATH=src python benchmarks/lifecycle_bench.py [--n 16] [--dim 4096]``
-or via the runner: ``PYTHONPATH=src python -m benchmarks.run lifecycle``
-(quick scale).
+Run: ``PYTHONPATH=src python benchmarks/lifecycle_bench.py [--n 16] [--dim 4096]``;
+``--smoke`` runs the small CI scale. Or via the runner:
+``PYTHONPATH=src python -m benchmarks.run lifecycle [--smoke]`` (quick scale).
 """
 
 from __future__ import annotations
@@ -33,6 +37,10 @@ import time
 import numpy as np
 
 from repro.core.engine import StorageEngine
+from repro.core.loader import materialize_many
+
+# Bumped whenever the JSON layout changes (parsed by benchmarks/perf_gate.py).
+SCHEMA_VERSION = 2
 
 
 def _models(n: int, dim: int, rng: np.random.Generator):
@@ -58,7 +66,41 @@ def _models(n: int, dim: int, rng: np.random.Generator):
     return keep, drop
 
 
-def run_bench(n: int = 16, dim: int = 4096, seed: int = 0) -> dict:
+def _bench_batch_save(models: dict, dim: int, sequential_s: float) -> dict:
+    """The same model set through ONE save_models tx, on a fresh store."""
+    specs = [(name, {}, tensors) for name, tensors in models.items()]
+    with tempfile.TemporaryDirectory() as root:
+        eng = StorageEngine(root)
+        t0 = time.perf_counter()
+        eng.save_models(specs)
+        batch_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        handles = eng.load_models([name for name, _ in models.items()])
+        outs = materialize_many(handles)
+        multi_load_s = time.perf_counter() - t0
+        # Reconstruction bound: the quantizer's |err| <= p plus the final
+        # float32 cast (up to half an ulp of the tensor's own magnitude).
+        p = 2.0 ** -24 * 1.001 + 1e-9
+        parity = all(
+            bool(np.all(
+                np.abs(out[k] - tensors[k])
+                <= p + np.spacing(np.abs(tensors[k]))
+            ))
+            for (name, tensors), out in zip(models.items(), outs)
+            for k in tensors
+        )
+    return {
+        "n_models": len(specs),
+        "seconds": batch_s,
+        "sequential_s": sequential_s,
+        "speedup_vs_sequential": sequential_s / batch_s,
+        "multi_load_s": multi_load_s,
+        "reconstruction_parity": bool(parity),
+    }
+
+
+def run_bench(n: int = 16, dim: int = 4096, seed: int = 0,
+              smoke: bool = False) -> dict:
     rng = np.random.default_rng(seed)
     keep, drop = _models(n, dim, rng)
     with tempfile.TemporaryDirectory() as root:
@@ -90,9 +132,14 @@ def run_bench(n: int = 16, dim: int = 4096, seed: int = 0) -> dict:
         reopen_s = time.perf_counter() - t0
         parity &= sorted(eng2.list_models()) == sorted(keep)
 
+    batch_save = _bench_batch_save({**keep, **drop}, dim, sum(save_s))
+
     return {
+        "schema_version": SCHEMA_VERSION,
+        "mode": "smoke" if smoke else "full",
         "config": {"n_models": n, "dim": dim, "seed": seed},
         "save_s_total": sum(save_s),
+        "batch_save": batch_save,
         "delete": {
             "n": len(drop),
             "seconds": delete_s,
@@ -116,10 +163,12 @@ def run_bench(n: int = 16, dim: int = 4096, seed: int = 0) -> dict:
     }
 
 
-def run(csv):
+def run(csv, smoke: bool = False):
     """Runner entry point (quick scale, CSV convention)."""
-    res = run_bench(n=8, dim=1024)
+    res = run_bench(n=6 if smoke else 8, dim=512 if smoke else 1024,
+                    smoke=smoke)
     d, v, b = res["delete"], res["vacuum"], res["bytes"]
+    bs = res["batch_save"]
     csv.add("lifecycle/delete_model", d["per_model_s"] * 1e6,
             f"n={d['n']}")
     csv.add("lifecycle/vacuum", v["seconds"] * 1e6,
@@ -128,23 +177,34 @@ def run(csv):
             f"pages={b['reclaimed_pages']},index={b['reclaimed_index']}")
     csv.add("lifecycle/reopen", res["reopen_s"] * 1e6,
             f"parity={res['post_vacuum_load_parity']}")
+    csv.add("lifecycle/save_models", bs["seconds"] / bs["n_models"] * 1e6,
+            f"speedup_vs_sequential={bs['speedup_vs_sequential']:.2f}x")
 
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--n", type=int, default=16)
     ap.add_argument("--dim", type=int, default=4096)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CI scale (<1 min): 8 models, dim 512")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
         "BENCH_lifecycle.json"))
     args = ap.parse_args()
-    res = run_bench(n=args.n, dim=args.dim)
+    if args.smoke:
+        args.n, args.dim = 8, 512
+    res = run_bench(n=args.n, dim=args.dim, smoke=args.smoke)
     res["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S")
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2)
     b, v = res["bytes"], res["vacuum"]
+    bs = res["batch_save"]
     print(f"saved {args.n} models ({res['save_s_total']:.2f}s), "
           f"deleted {res['delete']['n']} ({res['delete']['seconds']:.3f}s)")
+    print(f"save_models:  {bs['sequential_s']:.2f}s -> {bs['seconds']:.2f}s "
+          f"({bs['speedup_vs_sequential']:.2f}x, one tx; multi-load "
+          f"{bs['multi_load_s']:.3f}s, parity "
+          f"{bs['reconstruction_parity']})")
     print(f"vacuum: {v['seconds']:.3f}s, dropped {v['vertices_dropped']} "
           f"vertices, rewrote {v['pages_rewritten']} pages")
     print(f"reclaimed: pages {b['reclaimed_pages']}, index "

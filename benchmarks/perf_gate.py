@@ -1,0 +1,88 @@
+"""CI perf gate: parse bench JSON artifacts, fail on ingest regressions.
+
+The contract (docs/ingestion.md "CI perf-gate contract"):
+
+* every bench JSON must carry a ``schema_version`` this gate understands
+  (currently 2; pre-versioned files are rejected with a clear message
+  rather than silently passing);
+* ``BENCH_hnsw.json``: batched ingest must not be slower than the
+  sequential insert loop measured in the same run —
+  ``insert_batch.speedup_vs_single >= 1.0``. This is a coarse gate on
+  purpose: CI runners are noisy, but a batched path that loses to
+  single-insert is a real regression at any noise level (the full-scale
+  acceptance bar is 3x, checked on dev machines / in BENCH_hnsw.json);
+* ``BENCH_lifecycle.json``: ``batch_save.reconstruction_parity`` must be
+  true, and the one-transaction batch save must not be drastically slower
+  than the per-model loop (``speedup_vs_sequential >= 0.8`` — fsync timing
+  on shared runners jitters, so only a clear loss fails).
+
+Usage: ``python benchmarks/perf_gate.py BENCH_hnsw.json [BENCH_lifecycle.json]``
+Exits non-zero with a one-line reason per violated check.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+KNOWN_SCHEMAS = {2}
+MIN_BATCH_INGEST_SPEEDUP = 1.0
+MIN_BATCH_SAVE_SPEEDUP = 0.8
+
+
+def check_file(path: str) -> list[str]:
+    with open(path) as f:
+        res = json.load(f)
+    errors: list[str] = []
+    schema = res.get("schema_version")
+    if schema not in KNOWN_SCHEMAS:
+        return [f"{path}: missing/unknown schema_version {schema!r} "
+                f"(gate understands {sorted(KNOWN_SCHEMAS)})"]
+    if "insert_batch" in res:
+        speedup = res["insert_batch"]["speedup_vs_single"]
+        if speedup < MIN_BATCH_INGEST_SPEEDUP:
+            errors.append(
+                f"{path}: batched ingest regressed below single-insert "
+                f"(speedup_vs_single={speedup:.2f} < "
+                f"{MIN_BATCH_INGEST_SPEEDUP})")
+        else:
+            print(f"{path}: insert_batch {speedup:.2f}x vs single-insert ok")
+    elif "insert" in res:
+        errors.append(f"{path}: no insert_batch section — batched ingest "
+                      "was not measured")
+    if "batch_save" in res:
+        bs = res["batch_save"]
+        parity_ok = bool(bs.get("reconstruction_parity", False))
+        if not parity_ok:
+            errors.append(f"{path}: batch_save reconstruction parity FAILED")
+        speedup = bs["speedup_vs_sequential"]
+        if speedup < MIN_BATCH_SAVE_SPEEDUP:
+            errors.append(
+                f"{path}: save_models slower than per-model saves "
+                f"(speedup_vs_sequential={speedup:.2f} < "
+                f"{MIN_BATCH_SAVE_SPEEDUP})")
+        elif parity_ok:
+            print(f"{path}: save_models {speedup:.2f}x vs sequential ok "
+                  f"(parity=True)")
+    elif "delete" in res:
+        errors.append(f"{path}: no batch_save section — batched save was "
+                      "not measured")
+    return errors
+
+
+def main() -> None:
+    paths = sys.argv[1:]
+    if not paths:
+        sys.exit("usage: perf_gate.py BENCH_hnsw.json [BENCH_lifecycle.json]")
+    errors: list[str] = []
+    for path in paths:
+        errors.extend(check_file(path))
+    for err in errors:
+        print(f"PERF GATE: {err}", file=sys.stderr)
+    if errors:
+        sys.exit(1)
+    print("perf gate: all checks passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,17 @@
 """Benchmark runner — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (repo convention).
+
+``--smoke`` is passed through to modules whose ``run`` accepts it (the
+trajectory benchmarks: hnsw, lifecycle) — the CI bench-smoke job uses the
+same flag on the standalone scripts, which additionally write their
+``BENCH_*.json`` files with a ``schema_version`` field so the perf gate
+(``benchmarks/perf_gate.py``) can parse them stably.
 """
 
 from __future__ import annotations
 
+import inspect
 import sys
 
 
@@ -14,7 +21,9 @@ def main() -> None:
                    fig11_flexible, fig12_tolerance, fig13_accuracy,
                    table2_stats, pipeline_bench, hnsw_bench, lifecycle_bench)
 
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    args = [a for a in sys.argv[1:] if a != "--smoke"]
+    smoke = "--smoke" in sys.argv[1:]
+    only = args[0] if args else None
     modules = {
         "fig7": fig7_e2e, "fig8": fig8_throughput, "fig9": fig9_compression,
         "fig10": fig10_tau, "fig11": fig11_flexible, "fig12": fig12_tolerance,
@@ -27,7 +36,10 @@ def main() -> None:
     for name, mod in modules.items():
         if only and name != only:
             continue
-        mod.run(csv)
+        if smoke and "smoke" in inspect.signature(mod.run).parameters:
+            mod.run(csv, smoke=True)
+        else:
+            mod.run(csv)
         csv.emit()
         csv.rows.clear()
 

@@ -3,15 +3,17 @@
 from .catalog import Catalog, CatalogState, ModelEntry
 from .engine import DEFAULT_TAU, DEFAULT_TOLERANCE, SaveReport, StorageEngine
 from .hnsw import HNSWIndex, quantized_l2_batch
-from .loader import LoadedModel, PipelineLoader, reconstruct_jnp
+from .loader import LoadedModel, PipelineLoader, materialize_many, reconstruct_jnp
 from .quantize import (
     QuantMeta,
     delta_nbit,
     dequantize_delta,
     dequantize_linear,
+    dequantize_linear_batch,
     extract_msb,
     quantize_delta,
     quantize_linear,
+    quantize_linear_batch,
 )
 
 __all__ = [
@@ -29,9 +31,12 @@ __all__ = [
     "delta_nbit",
     "dequantize_delta",
     "dequantize_linear",
+    "dequantize_linear_batch",
     "extract_msb",
+    "materialize_many",
     "quantize_delta",
     "quantize_linear",
+    "quantize_linear_batch",
     "quantized_l2_batch",
     "reconstruct_jnp",
 ]

@@ -33,6 +33,8 @@ Record shapes (all JSON, one object per line; see ``docs/lifecycle.md``):
 * ``{"tx", "op": "delete",  "name", "id", "page", "refs"}``
 * ``{"tx", "op": "replace", "name", "id", "page", "new_vertices",
   "old_id", "old_page", "old_refs"}``
+* ``{"tx", "op": "save_batch", "models": [{"name", "id", "page"[,
+  "old_id", "old_page", "old_refs"]}, …], "new_vertices"}``
 * ``{"tx", "op": "vacuum",        "dim", "pages"}``
 * ``{"tx", "op": "vacuum_switch", "dim", "index", "pages", "refs"}``
 * ``{"tx", "op": "commit"}``
@@ -41,7 +43,9 @@ Record shapes (all JSON, one object per line; see ``docs/lifecycle.md``):
 the model held); ``new_vertices`` is ``[[dim, vertex_id], …]`` (vertices
 first created by the interrupted save). ``vacuum_switch.refs`` is the full
 post-remap ``{vertex_id: count}`` map for the dim, recorded wholesale so
-roll-forward replay is idempotent.
+roll-forward replay is idempotent. ``save_batch`` (``save_models``) commits
+every listed model through ONE snapshot replace — replay is all-or-nothing
+across the batch, keyed off the first member's presence in the snapshot.
 
 Fault injection: tests add point names to :data:`FAILPOINTS`;
 :func:`maybe_fail` raises :class:`InjectedCrash` at matching points inside

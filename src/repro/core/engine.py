@@ -74,7 +74,9 @@ from .pages import (
 )
 from .quantize import (
     dequantize_delta,
+    dequantize_linear_batch,
     quantize_delta,
+    quantize_linear_batch,
 )
 
 __all__ = ["StorageEngine", "SaveReport", "DEFAULT_TOLERANCE", "DEFAULT_TAU"]
@@ -83,6 +85,21 @@ __all__ = ["StorageEngine", "SaveReport", "DEFAULT_TOLERANCE", "DEFAULT_TAU"]
 # §6.1.3: default similarity threshold tau = 0.16.
 DEFAULT_TOLERANCE = 2.0 ** -24
 DEFAULT_TAU = 0.16
+
+# Save-probe regime switch (`_probe_dim_group`): brute-force the whole
+# (G, N) distance block while the index is small or the group is fat
+# relative to it; fall back to per-tensor HNSW descents on a grown index
+# so save latency stays O(polylog N). A graph walk evaluates roughly
+# ef·m·levels ≈ 512 candidate rows, hence the group factor.
+BRUTE_PROBE_MAX_INDEX = 4096
+BRUTE_PROBE_GROUP_FACTOR = 512
+
+# Dim groups are probed in chunks of at most this many float64 elements
+# (~64 MB for the stacked block), so a save's peak memory stays bounded by
+# the chunk and not the whole group. Bases a chunk creates are resident
+# before the next chunk probes, so cross-chunk dedup still happens — via
+# the index itself instead of an in-memory candidate matrix.
+PROBE_CHUNK_ELEMS = 1 << 23
 
 
 @dataclasses.dataclass
@@ -377,6 +394,8 @@ class StorageEngine:
             op = head.get("op")
             if op in ("save", "replace"):
                 self._recover_put(head)
+            elif op == "save_batch":
+                self._recover_save_batch(head)
             elif op == "delete":
                 self._recover_delete(head)
             elif op == "vacuum":
@@ -444,6 +463,34 @@ class StorageEngine:
         new_pairs = [(int(d), int(v)) for d, v in rec.get("new_vertices", [])]
         self._tombstone_unreferenced(new_pairs)
 
+    def _recover_save_batch(self, rec: dict) -> None:
+        """Replay an interrupted ``save_models``: all-or-nothing.
+
+        The snapshot replace is the single commit point for every model in
+        the batch, so checking any one member tells the whole story: if its
+        entry is present with the batch's model id the batch committed
+        (finish dropping replaced versions' remains), otherwise none of it
+        did (undo every page and every vertex the batch created).
+        """
+        models = rec.get("models", [])
+        if not models:
+            return
+        head = models[0]
+        entry = self.catalog.get(head["name"])
+        if entry is not None and entry.model_id == head["id"]:
+            for m in models:
+                if m.get("old_page"):
+                    old_refs = [
+                        (int(d), int(v)) for d, v, _c in m.get("old_refs", [])
+                    ]
+                    self._tombstone_unreferenced(old_refs)
+                    self._unlink(self._page_file(m["old_page"]))
+            return
+        for m in models:
+            self._unlink(self._page_file(m["page"]))
+        new_pairs = [(int(d), int(v)) for d, v in rec.get("new_vertices", [])]
+        self._tombstone_unreferenced(new_pairs)
+
     def _recover_delete(self, rec: dict) -> None:
         entry = self.catalog.get(rec["name"])
         if entry is not None and entry.model_id == rec["id"]:
@@ -476,6 +523,101 @@ class StorageEngine:
         )
 
     # ----------------------------------------------------------- save (Alg 1)
+    @staticmethod
+    def _iter_group_chunks(positions: list, dim: int):
+        """Split one dim group into probe chunks of bounded element count,
+        so the (chunk, dim) float64 stack — and every intermediate
+        ``_probe_dim_group`` builds from it — stays ~PROBE_CHUNK_ELEMS
+        regardless of how many tensors share the dim."""
+        step = max(1, PROBE_CHUNK_ELEMS // max(dim, 1))
+        for i in range(0, len(positions), step):
+            yield positions[i:i + step]
+
+    def _probe_dim_group(
+        self, index: HNSWIndex, flats: np.ndarray, tau_: float
+    ) -> tuple[list[tuple[int, np.ndarray]], list[int]]:
+        """Batched Algorithm 1 lines 2–3 for one dim group (engine lock held).
+
+        ``flats`` is the (G, dim) float64 block of every tensor in the
+        group. Instead of G independent HNSW descents, one
+        ``nearest_live_batch`` distance block (through the kernel dispatch
+        seam) finds each tensor's closest live base; tensors whose delta
+        range beats tau are quantized in **one** ``quantize_linear_batch``
+        sweep (the per-group hoist — bit-exact with per-tensor
+        ``quantize_linear``, see tests), checked against earlier in-group
+        bases so intra-save dedup matches the sequential path (a tensor
+        similar to a base created moments earlier in the same save becomes
+        a delta, not a second base), and inserted via ``insert_batch``.
+
+        Returns ``(bases, new_vids)``: ``bases[j] = (vertex_id, delta)``
+        in group order, ``new_vids`` the vertex ids created. Callers bound
+        ``flats`` to ``PROBE_CHUNK_ELEMS`` (see ``_iter_group_chunks``);
+        the intermediates here are all O(chunk).
+        """
+        g = flats.shape[0]
+        bases: list = [None] * g
+        best_vid = np.full(g, -1, dtype=np.int64)
+        if len(index):
+            # Small index or fat group: one exact (G, N) distance block
+            # beats G graph descents. Large index with a thin group: keep
+            # the O(polylog N) HNSW descent per tensor — a brute-force
+            # scan there would make save latency grow linearly with the
+            # store.
+            if (
+                len(index) <= BRUTE_PROBE_MAX_INDEX
+                or g * BRUTE_PROBE_GROUP_FACTOR >= len(index)
+            ):
+                best_vid, _ = index.nearest_live_batch(flats)
+            else:
+                for j in range(g):
+                    hit = index.search(flats[j], k=1, ef=self.ef_search)
+                    if hit:
+                        best_vid[j] = hit[0][1]
+        deq_cache: dict[int, np.ndarray] = {}
+        cand_pos: list[int] = []
+        for j in range(g):
+            vid = int(best_vid[j])
+            if vid >= 0:
+                base = deq_cache.get(vid)
+                if base is None:
+                    base = deq_cache[vid] = index.dequantize_vertex(vid)
+                delta = flats[j] - base
+                # SHOULDCOMPRESS: delta range vs tau (§4.2).
+                if float(delta.max() - delta.min()) <= tau_:
+                    bases[j] = (vid, delta)
+                    continue
+            cand_pos.append(j)
+        if not cand_pos:
+            return bases, []
+        cand = flats[cand_pos]
+        qc, qs, qz, qm = quantize_linear_batch(cand, nbit=8)
+        deq = dequantize_linear_batch(qc, qs, qz, qm)
+        accepted: list[int] = []  # local candidate indices → new bases
+        batch_refs: list[int] = []  # group positions resolved after insert
+        acc_mat = np.empty_like(cand)  # dequantized accepted bases, in order
+        for local_j, j in enumerate(cand_pos):
+            flat = flats[j]
+            if accepted:
+                diff = acc_mat[: len(accepted)] - flat
+                k = int(np.argmin(np.einsum("ad,ad->a", diff, diff)))
+                delta = flat - acc_mat[k]
+                if float(delta.max() - delta.min()) <= tau_:
+                    bases[j] = (k, delta)  # k resolved to a vid below
+                    batch_refs.append(j)
+                    continue
+            acc_mat[len(accepted)] = deq[local_j]
+            bases[j] = (len(accepted), flats[j] - deq[local_j])
+            batch_refs.append(j)
+            accepted.append(local_j)
+        sel = np.asarray(accepted, dtype=np.int64)
+        vids = index.insert_batch(
+            cand[sel], quantized=(qc[sel], qs[sel], qz[sel], qm[sel])
+        )
+        for j in batch_refs:
+            k, delta = bases[j]
+            bases[j] = (vids[k], delta)
+        return bases, vids
+
     def save_model(
         self,
         name: str,
@@ -513,11 +655,13 @@ class StorageEngine:
             by_dim.setdefault(src.size, []).append(len(items))
             items.append((tname, tuple(int(s) for s in src.shape), src))
 
-        # Phase 1 (locked): per-dim ANN search / vertex insert (Alg. 1
-        # l.2-3). Dims are pinned so a concurrent load's cache fetch cannot
-        # evict an index this save is mutating. Each tensor's float64
-        # upcast lives only for its own search/insert; only the delta
-        # survives the loop.
+        # Phase 1 (locked): per-dim batched ANN probe / batch vertex insert
+        # (Alg. 1 l.2-3 through `_probe_dim_group`): one distance block +
+        # one quantization sweep + one `insert_batch` per dim instead of
+        # per-tensor graph probes. Dims are pinned so a concurrent load's
+        # cache fetch cannot evict an index this save is mutating. The
+        # float64 upcast now lives per *group* (the batch paths need the
+        # (G, dim) block), released as each group resolves.
         bases: list[tuple[int, np.ndarray] | None] = [None] * len(items)
         refs: Counter = Counter()
         new_vertices: list[tuple[int, int]] = []
@@ -530,35 +674,29 @@ class StorageEngine:
                     for dim, positions in by_dim.items():
                         self._check_quarantine(dim)
                         index = self.index_cache.get(dim, create=True)
-                        for pos in positions:
-                            flat = np.asarray(
-                                items[pos][2], dtype=np.float64
-                            ).ravel()
-                            # (2) ANN search for the closest (live) base.
-                            hit = index.search(flat, k=1, ef=self.ef_search)
-                            vid = hit[0][1] if hit else -1
-                            if vid >= 0:
-                                base = index.dequantize_vertex(vid)
-                                delta = flat - base
-                            else:
-                                delta = None
-                            # (3) SHOULDCOMPRESS: delta range vs tau (§4.2).
-                            if delta is None or float(delta.max() - delta.min()) > tau_:
-                                # New vertex: quantize t to 8-bit, insert,
-                                # recompute delta against its own
-                                # de-quantized representation.
-                                vid = index.insert(flat)
+                        for chunk in self._iter_group_chunks(positions, dim):
+                            flats = np.stack([
+                                np.asarray(items[pos][2],
+                                           dtype=np.float64).ravel()
+                                for pos in chunk
+                            ])
+                            group_bases, group_new = self._probe_dim_group(
+                                index, flats, tau_
+                            )
+                            if group_new:
                                 self.index_cache.mark_dirty(dim)
-                                base = index.dequantize_vertex(vid)
-                                delta = flat - base
-                                new_vertices.append((dim, vid))
-                                n_new += 1
-                            bases[pos] = (vid, delta)
-                            refs[(dim, vid)] += 1
-                            # Hold the ref until commit so a concurrent
-                            # delete cannot tombstone this base under the
-                            # page.
-                            self._inflight[(dim, vid)] += 1
+                                new_vertices.extend(
+                                    (dim, v) for v in group_new
+                                )
+                                n_new += len(group_new)
+                            for gj, pos in enumerate(chunk):
+                                vid, delta = group_bases[gj]
+                                bases[pos] = (vid, delta)
+                                refs[(dim, vid)] += 1
+                                # Hold the ref until commit so a concurrent
+                                # delete cannot tombstone this base under
+                                # the page.
+                                self._inflight[(dim, vid)] += 1
             finally:
                 for dim in by_dim:
                     self.index_cache.unpin(dim)
@@ -656,6 +794,210 @@ class StorageEngine:
             nbits=nbits,
             seconds=time.perf_counter() - t0,
         )
+
+    def save_models(
+        self,
+        models,
+        tolerance: float | None = None,
+        tau: float | None = None,
+    ) -> list[SaveReport]:
+        """Save several models under ONE catalog transaction (batch ingest).
+
+        ``models`` is an iterable of ``(name, architecture, tensors)``
+        triples. Tensor groups are formed **across the whole batch** per
+        flattened dim, so a checkpoint sweep pays one index fetch, one
+        batched probe and one ``insert_batch`` per dim for all models
+        together (fine-tunes later in the batch dedup against bases the
+        batch itself just created), and the commit protocol runs once:
+        one journal intent, one index flush, one atomic ``meta.json``
+        replace for every model — amortizing the fsyncs that dominate
+        small-model save latency.
+
+        All-or-nothing: a crash at any point replays to either every model
+        committed or none (op ``save_batch`` in the journal; failpoints
+        ``save_batch.after_intent`` / ``after_index_flush`` /
+        ``after_page_write`` / ``after_snapshot``). Saving over an existing
+        name is a replace, exactly as in :meth:`save_model`.
+
+        Returns one :class:`SaveReport` per model, in input order, with the
+        batch wall time amortized evenly over the ``seconds`` fields.
+        """
+        t0 = time.perf_counter()
+        p = self.tolerance if tolerance is None else tolerance
+        tau_ = self.tau if tau is None else tau
+        specs = [(str(n), a, t) for n, a, t in models]
+        names = [n for n, _, _ in specs]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate model names in batch: {names}")
+        if not specs:
+            return []
+
+        # Flatten: per-model item lists + one cross-model dim grouping.
+        all_items: list[list[tuple[str, tuple[int, ...], object]]] = []
+        original_bytes: list[int] = []
+        by_dim: "OrderedDict[int, list[tuple[int, int]]]" = OrderedDict()
+        for mi, (_name, _arch, tensors) in enumerate(specs):
+            items: list[tuple[str, tuple[int, ...], object]] = []
+            nbytes = 0
+            for tname, tensor in tensors.items():
+                src = np.asarray(tensor)
+                nbytes += src.size * 4  # stored models are float32
+                by_dim.setdefault(src.size, []).append((mi, len(items)))
+                items.append((tname, tuple(int(s) for s in src.shape), src))
+            all_items.append(items)
+            original_bytes.append(nbytes)
+
+        # Phase 1 (locked): one batched probe + insert per dim for the
+        # whole batch — the cross-model half of the ingest amortization.
+        bases: list[list] = [[None] * len(items) for items in all_items]
+        refs: Counter = Counter()
+        new_vertices: list[tuple[int, int]] = []
+        n_new_per_model = [0] * len(specs)
+        try:
+            for dim in by_dim:
+                self.index_cache.pin(dim)
+            try:
+                with self._lock:
+                    for dim, positions in by_dim.items():
+                        self._check_quarantine(dim)
+                        index = self.index_cache.get(dim, create=True)
+                        for chunk in self._iter_group_chunks(positions, dim):
+                            flats = np.stack([
+                                np.asarray(
+                                    all_items[mi][pos][2], dtype=np.float64
+                                ).ravel()
+                                for mi, pos in chunk
+                            ])
+                            group_bases, group_new = self._probe_dim_group(
+                                index, flats, tau_
+                            )
+                            if group_new:
+                                self.index_cache.mark_dirty(dim)
+                                new_vertices.extend(
+                                    (dim, v) for v in group_new
+                                )
+                            group_new_set = set(group_new)
+                            for gj, (mi, pos) in enumerate(chunk):
+                                vid, delta = group_bases[gj]
+                                bases[mi][pos] = (vid, delta)
+                                refs[(dim, vid)] += 1
+                                self._inflight[(dim, vid)] += 1
+                                if vid in group_new_set:
+                                    group_new_set.discard(vid)
+                                    n_new_per_model[mi] += 1
+            finally:
+                for dim in by_dim:
+                    self.index_cache.unpin(dim)
+
+            # Phase 2 (unlocked): encode every model's page.
+            pages: list[bytes] = []
+            nbits_per_model: list[list[int]] = []
+            for mi, items in enumerate(all_items):
+                records: list[TensorRecord] = []
+                nbits: list[int] = []
+                for i, (tname, shape, src) in enumerate(items):
+                    vid, delta = bases[mi][i]
+                    bases[mi][i] = (vid, None)  # release the delta
+                    qd, meta = quantize_delta(delta, p)
+                    nbits.append(meta.nbit)
+                    rec = TensorRecord(
+                        name=tname,
+                        shape=shape,
+                        dim_key=src.size,
+                        vertex_id=vid,
+                        meta=meta,
+                        qdelta=qd,
+                    )
+                    rec.payload = encode_payload(rec)
+                    records.append(rec)
+                pages.append(write_page(records))
+                nbits_per_model.append(nbits)
+
+            # Phase 3 (locked): ONE journaled commit for the whole batch.
+            with self._lock:
+                olds = [self.catalog.get(n) for n in names]
+                old_refs = [
+                    self._page_refs(o.page) if o else Counter() for o in olds
+                ]
+                model_ids = [self.catalog.allocate_id() for _ in specs]
+                page_names = [f"model_{mid}.page" for mid in model_ids]
+                intent_models = []
+                for mi, (name, _arch, _t) in enumerate(specs):
+                    m: dict = {
+                        "name": name,
+                        "id": model_ids[mi],
+                        "page": page_names[mi],
+                    }
+                    if olds[mi]:
+                        m["old_id"] = olds[mi].model_id
+                        m["old_page"] = olds[mi].page
+                        m["old_refs"] = [
+                            [d, v, c] for (d, v), c in old_refs[mi].items()
+                        ]
+                    intent_models.append(m)
+                tx = self.catalog.begin({
+                    "op": "save_batch",
+                    "models": intent_models,
+                    "new_vertices": [[d, v] for d, v in new_vertices],
+                })
+                maybe_fail("save_batch.after_intent")
+                self.index_cache.flush()
+                maybe_fail("save_batch.after_index_flush")
+                for mi in range(len(specs)):
+                    _write_file_durable(
+                        self._page_file(page_names[mi]), pages[mi]
+                    )
+                maybe_fail("save_batch.after_page_write")
+                for mi, (name, arch, _t) in enumerate(specs):
+                    self.catalog.state.models[name] = ModelEntry(
+                        model_id=model_ids[mi],
+                        name=name,
+                        architecture=arch,
+                        page=page_names[mi],
+                        n_tensors=len(all_items[mi]),
+                        original_bytes=original_bytes[mi],
+                        status=STATUS_COMMITTED,
+                    )
+                for (dim, vid), c in refs.items():
+                    self.catalog.ref(dim, vid, c)
+                for mi in range(len(specs)):
+                    for (dim, vid), c in old_refs[mi].items():
+                        self.catalog.ref(dim, vid, -c)
+                self.catalog.save_snapshot()  # ← commit point for ALL models
+                maybe_fail("save_batch.after_snapshot")
+                dropped_old = False
+                for mi in range(len(specs)):
+                    if olds[mi]:
+                        self._tombstone_unreferenced(old_refs[mi])
+                        self._unlink(self._page_file(olds[mi].page))
+                        dropped_old = True
+                if dropped_old:
+                    self.index_cache.flush()
+                self.catalog.commit_tx(tx)
+                self.index_cache.trim()
+        finally:
+            with self._lock:
+                for pair, c in refs.items():
+                    left = self._inflight[pair] - c
+                    if left > 0:
+                        self._inflight[pair] = left
+                    else:
+                        del self._inflight[pair]
+        per_model_s = (time.perf_counter() - t0) / len(specs)
+        return [
+            SaveReport(
+                model_id=model_ids[mi],
+                name=names[mi],
+                original_bytes=original_bytes[mi],
+                page_bytes=len(pages[mi]),
+                n_tensors=len(all_items[mi]),
+                n_new_bases=n_new_per_model[mi],
+                n_deltas=len(all_items[mi]) - n_new_per_model[mi],
+                nbits=nbits_per_model[mi],
+                seconds=per_model_s,
+            )
+            for mi in range(len(specs))
+        ]
 
     # -------------------------------------------------------------- lifecycle
     def delete_model(self, name: str) -> None:
@@ -855,6 +1197,16 @@ class StorageEngine:
         with self._lock:
             self._open_loaders.add(lm)
         return lm
+
+    def load_models(self, names, bits: int | None = None) -> list:
+        """Open handles over several models (the multi-save counterpart).
+
+        Returns one :class:`~repro.core.loader.LoadedModel` per name, in
+        order. Feed the result to
+        :func:`repro.core.loader.materialize_many` to reconstruct them with
+        each base shared *across* handles de-quantized once.
+        """
+        return [self.load_model(name, bits=bits) for name in names]
 
     # ------------------------------------------------------------ accounting
     def list_models(self) -> list[str]:

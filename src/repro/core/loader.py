@@ -32,7 +32,7 @@ import numpy as np
 from .pages import TensorPage, TensorRecord, decode_payload, read_record, read_record_partial
 from .quantize import dequantize_delta, dequantize_linear
 
-__all__ = ["LoadedModel", "PipelineLoader", "reconstruct_jnp"]
+__all__ = ["LoadedModel", "PipelineLoader", "materialize_many", "reconstruct_jnp"]
 
 
 def reconstruct_jnp(base_codes, base_scale, base_zp, qdelta, delta_scale, delta_zp):
@@ -213,6 +213,57 @@ class LoadedModel:
                 "nbit": rec.meta.nbit,
             }
         return out
+
+
+def materialize_many(models: list["LoadedModel"]) -> list[dict[str, np.ndarray]]:
+    """Materialize several handles, de-quantizing each base once per batch.
+
+    The load-side counterpart of ``StorageEngine.save_models``: a base
+    vertex referenced by records in *different* handles (a checkpoint sweep
+    loading a family of fine-tunes) is de-quantized once and seeded into
+    every holder's per-pass cache, instead of once per handle. Per-handle
+    share accounting is untouched — the seeded copy drains through the
+    normal countdown, so repeated materialize passes behave exactly as
+    before. Returns one ``{name: tensor}`` dict per handle, in order.
+    """
+    # Group by live record objects, not snapshotted (dim, vid) keys: a
+    # concurrent vacuum renumbers vertex ids in place via
+    # _apply_vertex_remap, so every id read AND the codes fetch must share
+    # one critical section, and the seed below re-derives each key from
+    # the record at seed time (the same two-phase discipline as
+    # LoadedModel._base — base *bytes* are invariant across compaction,
+    # only the numbering moves).
+    by_engine: dict[int, list[LoadedModel]] = {}
+    for lm in models:
+        by_engine.setdefault(id(lm.engine), []).append(lm)
+    for lms in by_engine.values():
+        engine = lms[0].engine
+        with engine._lock:
+            groups: dict[tuple[int, int], list[tuple[LoadedModel, TensorRecord]]] = {}
+            for lm in lms:
+                seen: set[tuple[int, int]] = set()
+                for rec in lm._records.values():
+                    key = (rec.dim_key, rec.vertex_id)
+                    if rec.vertex_id >= 0 and key not in seen:
+                        seen.add(key)
+                        groups.setdefault(key, []).append((lm, rec))
+            fetched = []
+            for (dim, vid), holders in groups.items():
+                if len(holders) < 2:
+                    continue  # shared within one handle only: _base caches it
+                engine._check_quarantine(dim)
+                index = engine.index_cache.get(dim)
+                codes, meta = index.vertex_codes(vid)
+                fetched.append((holders, codes.copy(), meta))
+        for holders, codes, meta in fetched:
+            base = dequantize_linear(codes, meta)
+            with engine._lock:
+                for lm, rec in holders:
+                    if rec.vertex_id >= 0:  # key re-derived post-any-remap
+                        lm._deq_base.setdefault(
+                            (rec.dim_key, rec.vertex_id), base
+                        )
+    return [lm.materialize() for lm in models]
 
 
 class PipelineLoader:

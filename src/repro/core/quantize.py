@@ -28,7 +28,9 @@ import numpy as np
 __all__ = [
     "QuantMeta",
     "quantize_linear",
+    "quantize_linear_batch",
     "dequantize_linear",
+    "dequantize_linear_batch",
     "delta_nbit",
     "quantize_delta",
     "dequantize_delta",
@@ -71,10 +73,61 @@ def quantize_linear(x: np.ndarray, nbit: int = 8) -> tuple[np.ndarray, QuantMeta
     return q, QuantMeta(scale=scale, zero_point=zero_point, nbit=nbit)
 
 
+def quantize_linear_batch(
+    x: np.ndarray, nbit: int = 8
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Row-wise :func:`quantize_linear` over a ``(B, D)`` block in one sweep.
+
+    Returns ``(codes, scales, zero_points, mids)`` with per-row parameter
+    arrays. Bit-exact with the per-tensor path: every operation (min/max,
+    ``x / s``, round-half-even, clip) is the same float64 computation
+    broadcast over rows, so ``codes[i]`` equals ``quantize_linear(x[i])[0]``
+    exactly (asserted in ``tests/test_batch_ingest.py``). Constant rows get
+    ``scale == 0`` with the constant in ``mids`` — same convention as the
+    scalar path.
+    """
+    x2 = np.atleast_2d(np.asarray(x, dtype=np.float64))
+    b, _d = x2.shape
+    levels = (1 << nbit) - 1
+    xmin = x2.min(axis=1)
+    xmax = x2.max(axis=1)
+    const = xmax <= xmin
+    scales = np.where(const, 0.0, (xmax - xmin) / levels)
+    safe = np.where(const, 1.0, scales)
+    zps = np.where(const, 0, np.round(-xmin / safe)).astype(np.int64)
+    # Fused float path: round yields integral float64 (exact ≤ 2^53), so
+    # adding the zero-point and clipping before the single int cast is
+    # value-identical to the scalar path's int64 arithmetic.
+    q = np.round(x2 / safe[:, None])
+    q += zps.astype(np.float64)[:, None]
+    np.clip(q, 0, levels, out=q)
+    codes = q.astype(np.int64)
+    codes[const] = 0
+    mids = np.where(const, xmin, 0.0)
+    return codes, scales, zps, mids
+
+
 def dequantize_linear(q: np.ndarray, meta: QuantMeta) -> np.ndarray:
     if meta.scale == 0.0:
         return np.full(q.shape, meta.mid, dtype=np.float64)
     return (q.astype(np.float64) - meta.zero_point) * meta.scale
+
+
+def dequantize_linear_batch(
+    codes: np.ndarray,
+    scales: np.ndarray,
+    zero_points: np.ndarray,
+    mids: np.ndarray,
+) -> np.ndarray:
+    """Row-wise inverse of :func:`quantize_linear_batch` → ``(B, D)`` float64."""
+    c2 = np.atleast_2d(codes)
+    s = np.asarray(scales, dtype=np.float64)
+    z = np.asarray(zero_points, dtype=np.float64)
+    deq = (c2.astype(np.float64) - z[:, None]) * s[:, None]
+    const = s == 0.0
+    if const.any():
+        deq[const] = np.asarray(mids, dtype=np.float64)[const, None]
+    return deq
 
 
 def delta_nbit(dmin: float, dmax: float, p: float) -> int:

@@ -16,11 +16,60 @@ from .flash_attention import flash_attention_pallas
 from .quantized_l2 import quantized_l2_pallas
 
 __all__ = ["dequant_matmul", "dequant_matmul_int4", "flash_attention",
-           "quantized_l2", "pack_int4"]
+           "quantized_l2", "quantized_l2_auto", "pack_int4",
+           "KERNEL_DISPATCH_MIN_ELEMS"]
+
+# Code blocks (N*D elements) below this floor never dispatch to the kernel:
+# the launch + host<->device transfer would swamp the distance math.
+KERNEL_DISPATCH_MIN_ELEMS = 4 << 20
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def quantized_l2_auto(queries, codes, scales, zps, mids, *,
+                      min_elems: int = KERNEL_DISPATCH_MIN_ELEMS,
+                      force: str | None = None):
+    """Dispatch seam for the HNSW batched-distance hot loop.
+
+    Routes a (B, D)-queries-vs-(N, D)-codes block to the Pallas
+    ``quantized_l2`` kernel when running on a TPU backend and the block is
+    large enough to amortize the launch. Returns the (B, N) float64
+    distances, or ``None`` so the caller (``repro.core.hnsw``) falls back
+    to its numpy decomposed-gemm form — on CPU that fallback *is* the fast
+    path (interpret-mode Pallas executes the kernel body in Python).
+
+    ``force="kernel"`` runs the kernel regardless of backend/size (tests
+    use this for CPU interpret-mode parity); ``force="numpy"`` always
+    declines.
+    """
+    if force == "numpy":
+        return None
+    codes = np.asarray(codes)
+    if force != "kernel" and (not _on_tpu() or codes.size < min_elems):
+        return None
+    q2 = np.atleast_2d(np.asarray(queries, dtype=np.float32))
+    n, d = codes.shape
+    if q2.shape[0] == 0:
+        return np.zeros((0, n), dtype=np.float64)
+    # Hoist the O(N*D) pad + host→device transfer out of the per-query
+    # loop: once padded, the _pad_to calls inside quantized_l2 are no-ops
+    # and each iteration is just one (jit-cached) kernel launch. d_true
+    # carries the real dimension past the padding.
+    bd = min(512, max(128, d)) if d < 512 else 512
+    codes_j = _pad_to(_pad_to(jnp.asarray(codes), 128, 0), bd, 1)
+    s = _pad_to(jnp.asarray(np.asarray(scales, dtype=np.float32)), 128, 0)
+    z = _pad_to(jnp.asarray(np.asarray(zps, dtype=np.float32)), 128, 0)
+    m = _pad_to(jnp.asarray(np.asarray(mids, dtype=np.float32)), 128, 0)
+    out = [
+        np.asarray(
+            quantized_l2(_pad_to(jnp.asarray(q), bd, 0), codes_j, s, z, m,
+                         d_true=d)
+        )[:n]
+        for q in q2
+    ]
+    return np.stack(out).astype(np.float64)
 
 
 def _pad_to(x, mult, axis, value=0):
@@ -79,12 +128,16 @@ def dequant_matmul_int4(x, base, base_scale, base_zp, packed_delta,
 
 
 def quantized_l2(query, codes, scales, zps, mids,
-                 *, block_n=128, block_d=512, interpret=None):
+                 *, block_n=128, block_d=512, d_true=None, interpret=None):
     """HNSW distance hot loop; pads N and D, returns (N,) f32.
 
     The kernel computes the decomposed form (code moments + per-row quant
     params; see ``quantized_l2.py``) — zero padding is exact because padded
     codes/query columns contribute nothing to the accumulated moments.
+    ``d_true`` overrides the unpadded dimension when the caller passes
+    already-padded inputs (``quantized_l2_auto`` hoists the padding out of
+    its per-query loop); it scopes the zero-point D·z² correction to the
+    real columns.
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -98,7 +151,8 @@ def quantized_l2(query, codes, scales, zps, mids,
     zpsp = _pad_to(jnp.asarray(zps), block_n, 0)
     midsp = _pad_to(jnp.asarray(mids), block_n, 0)
     out = quantized_l2_pallas(qp, codesp, scalesp, zpsp, midsp,
-                              block_n=block_n, block_d=bd, d_true=d,
+                              block_n=block_n, block_d=bd,
+                              d_true=d if d_true is None else d_true,
                               interpret=interpret)
     return out[:n]
 
