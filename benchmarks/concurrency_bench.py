@@ -1,0 +1,276 @@
+"""Concurrent-read benchmark: snapshot readers vs the global-lock baseline.
+
+Measures the concurrency subsystem (buffer pool + snapshot-isolated loads):
+
+* **serialized baseline** — N reader threads materializing models behind
+  ONE global mutex, each load bypassing the buffer pool
+  (``shared_cache=False``: private page bytes, private payload decode) —
+  the pre-concurrency read path, where every read re-reads and re-decodes
+  under exclusion;
+* **concurrent** — the same N readers on the snapshot path (short capture
+  critical section, then lock-free materialization over pooled frames and
+  shared decoded payloads) while ONE writer thread replaces/deletes models
+  and vacuums in a loop — the ISSUE 4 scenario;
+* per-read **p50/p99 latency** and **aggregate throughput** for both, plus
+  the writer's op count and the engine's pool/snapshot counters.
+
+The acceptance bar (checked against the full-scale run recorded in
+``BENCH_concurrency.json``): ≥2x aggregate read throughput with 4 reader
+threads vs the serialized baseline on CPU. The CI gate
+(``benchmarks/perf_gate.py``) enforces the coarse invariant
+``concurrent >= serialized`` on the noisy shared runners.
+
+Run: ``PYTHONPATH=src python benchmarks/concurrency_bench.py [--readers 4]``;
+``--smoke`` runs the small CI scale. Or via the runner:
+``PYTHONPATH=src python -m benchmarks.run concurrency [--smoke]``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.core.engine import StorageEngine
+
+# Bumped whenever the JSON layout changes (parsed by benchmarks/perf_gate.py).
+SCHEMA_VERSION = 2
+
+
+def _models(n: int, dim: int, rng: np.random.Generator) -> list[tuple]:
+    """Dissimilar models (each owns its bases) with matmul-sized tensors so
+    materialization is numpy-dominated — the serving-shaped workload."""
+    side = int(dim ** 0.5)
+    out = []
+    for i in range(n):
+        tensors = {
+            "w0": rng.normal(0, 5.0, (side, side)).astype(np.float32),
+            "w1": rng.normal(0, 5.0, (side, side)).astype(np.float32),
+            "b": rng.normal(0, 5.0, (side,)).astype(np.float32),
+        }
+        out.append((f"m{i}", {"layer": i}, tensors))
+    return out
+
+
+def _percentile(xs: list[float], p: float) -> float:
+    return float(np.percentile(np.asarray(xs), p)) if xs else 0.0
+
+
+def _run_phase(engine, specs, n_readers: int, duration_s: float,
+               serialized: bool, write_interval_s: float):
+    """One measured phase: N reader threads + one pacing writer thread.
+
+    ``serialized`` models the pre-concurrency engine: EVERY operation —
+    reads (which also bypass the buffer pool and re-decode privately,
+    exactly the old load path) and writes alike — funnels through one
+    global mutex. The concurrent mode runs the same workload through the
+    snapshot path with no mutex. The writer replaces one model per tick
+    and vacuums periodically, so both phases pay the same write load and
+    the comparison isolates the read-path concurrency.
+    """
+    names = [n for n, _, _ in specs]
+    mutex = threading.Lock()  # the global-lock stand-in (serialized mode)
+    stop = threading.Event()
+    lat: list[list[float]] = [[] for _ in range(n_readers)]
+    writer_ops = {"saves": 0, "deletes": 0, "replaces": 0, "vacuums": 0}
+
+    def reader(slot: int):
+        rng = np.random.default_rng(slot)
+        my = lat[slot]
+        while not stop.is_set():
+            name = names[int(rng.integers(len(names)))]
+            t0 = time.perf_counter()
+            try:
+                if serialized:
+                    with mutex:
+                        engine.load_model(name, shared_cache=False).materialize()
+                else:
+                    engine.load_model(name).materialize()
+            except KeyError:
+                continue  # raced the writer mid-replace: not a read
+            my.append(time.perf_counter() - t0)
+
+    def write_op(fn):
+        if serialized:
+            with mutex:
+                return fn()
+        return fn()
+
+    def writer():
+        # A serving-shaped write mix: steady ingest/delete churn of small
+        # models (short commits), an occasional replace of a model the
+        # readers are hitting (exercises invalidation + snapshot
+        # isolation), periodic vacuum (exercises copy-on-write GC).
+        k = 0
+        wrng = np.random.default_rng(99)
+        while not stop.wait(write_interval_s):
+            small = {
+                "w": wrng.normal(0, 5.0, (96, 96)).astype(np.float32),
+                "b": wrng.normal(0, 5.0, (96,)).astype(np.float32),
+            }
+            write_op(lambda: engine.save_model(f"ingest{k}", {}, small))
+            writer_ops["saves"] += 1
+            if k >= 4:
+                write_op(lambda: engine.delete_model(f"ingest{k - 4}"))
+                writer_ops["deletes"] += 1
+            if k % 6 == 5:
+                name, arch, tensors = specs[k % len(specs)]
+                fresh = {kk: wrng.normal(0, 5.0, vv.shape).astype(np.float32)
+                         for kk, vv in tensors.items()}
+                write_op(lambda: engine.replace_model(name, arch, fresh))
+                writer_ops["replaces"] += 1
+            if k % 8 == 7:
+                write_op(lambda: engine.vacuum(min_dead_fraction=0.25))
+                writer_ops["vacuums"] += 1
+            k += 1
+        # Leave the store as the next phase expects it: no ingest leftovers.
+        for name in list(engine.list_models()):
+            if name.startswith("ingest"):
+                write_op(lambda name=name: engine.delete_model(name))
+
+    threads = [threading.Thread(target=reader, args=(s,))
+               for s in range(n_readers)]
+    wt = threading.Thread(target=writer)
+    t_start = time.perf_counter()
+    for t in threads:
+        t.start()
+    wt.start()
+    time.sleep(duration_s)
+    # Wall stops at the stop signal: the thread-drain tail (a reader or
+    # the writer finishing its in-flight op) must not dilute throughput.
+    wall = time.perf_counter() - t_start
+    stop.set()
+    for t in threads:
+        t.join()
+    wt.join()
+    all_lat = [x for slot in lat for x in slot]
+    return {
+        "reads": len(all_lat),
+        "wall_s": wall,
+        "reads_per_s": len(all_lat) / wall,
+        "p50_ms": _percentile(all_lat, 50) * 1e3,
+        "p99_ms": _percentile(all_lat, 99) * 1e3,
+        "writer_ops": dict(writer_ops),
+    }
+
+
+def run_bench(n_models: int = 8, dim: int = 262144, n_readers: int = 4,
+              duration_s: float = 6.0, write_interval_s: float = 0.15,
+              reps: int = 2, smoke: bool = False) -> dict:
+    rng = np.random.default_rng(0)
+    specs = _models(n_models, dim, rng)
+
+    def phase(serialized: bool):
+        # Fresh store per phase: both modes start from the identical
+        # just-ingested state, so neither inherits the other's index
+        # growth or page churn.
+        with tempfile.TemporaryDirectory() as root:
+            engine = StorageEngine(root)
+            engine.save_models(specs)
+            res = _run_phase(engine, specs, n_readers, duration_s,
+                             serialized=serialized,
+                             write_interval_s=write_interval_s)
+            res["engine_stats"] = {
+                "epoch": engine.stats()["epoch"],
+                "buffer_pool": engine.stats()["buffer_pool"],
+            }
+        return res
+
+    # Best-of-N per mode: scheduler noise on shared runners stalls a whole
+    # phase (one descheduled writer wedges everything behind it); the best
+    # rep reflects what each read path can actually sustain.
+    ser_reps = [phase(True) for _ in range(reps)]
+    con_reps = [phase(False) for _ in range(reps)]
+    serialized = max(ser_reps, key=lambda r: r["reads_per_s"])
+    concurrent = max(con_reps, key=lambda r: r["reads_per_s"])
+    stats = concurrent.pop("engine_stats")
+    serialized.pop("engine_stats", None)
+
+    speedup = (concurrent["reads_per_s"] / serialized["reads_per_s"]
+               if serialized["reads_per_s"] else float("inf"))
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "mode": "smoke" if smoke else "full",
+        "config": {
+            "n_models": n_models,
+            "dim": dim,
+            "n_readers": n_readers,
+            "duration_s": duration_s,
+            "write_interval_s": write_interval_s,
+            "reps": reps,
+        },
+        "concurrent_read": {
+            "serialized": serialized,
+            "concurrent": concurrent,
+            "speedup_vs_serialized": speedup,
+            "all_reps": {
+                "serialized_reads_per_s": [r["reads_per_s"] for r in ser_reps],
+                "concurrent_reads_per_s": [r["reads_per_s"] for r in con_reps],
+            },
+        },
+        "engine_stats": stats,
+    }
+
+
+def run(csv, smoke: bool = False):
+    """Runner entry point (quick scale, CSV convention)."""
+    res = run_bench(n_models=4, dim=65536, n_readers=4,
+                    duration_s=1.0 if smoke else 2.0, smoke=smoke)
+    cr = res["concurrent_read"]
+    csv.add("concurrency/serialized_read",
+            cr["serialized"]["p50_ms"] * 1e3,
+            f"reads_per_s={cr['serialized']['reads_per_s']:.0f}")
+    csv.add("concurrency/concurrent_read",
+            cr["concurrent"]["p50_ms"] * 1e3,
+            f"reads_per_s={cr['concurrent']['reads_per_s']:.0f},"
+            f"speedup={cr['speedup_vs_serialized']:.2f}x")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--models", type=int, default=8)
+    ap.add_argument("--dim", type=int, default=262144,
+                    help="flattened elements per weight tensor (512x512)")
+    ap.add_argument("--readers", type=int, default=4)
+    ap.add_argument("--duration", type=float, default=6.0,
+                    help="seconds per read phase")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CI scale: 4 models, dim 65536, 3s phases")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_concurrency.json"))
+    args = ap.parse_args()
+    if args.smoke:
+        # Dim 65536 (256x256 tensors) keeps each read's numpy chunks large
+        # enough that the GIL is released for most of the work — smaller
+        # smoke scales sit in a convoy regime where 5 threads on 2 cores
+        # thrash on sub-ms ops and the measurement turns bimodal.
+        args.models, args.dim, args.duration = 4, 65536, 3.0
+    res = run_bench(n_models=args.models, dim=args.dim,
+                    n_readers=args.readers, duration_s=args.duration,
+                    smoke=args.smoke)
+    res["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S")
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+    cr = res["concurrent_read"]
+    s, c = cr["serialized"], cr["concurrent"]
+    print(f"serialized ({args.readers} readers, global lock): "
+          f"{s['reads_per_s']:.1f} reads/s  "
+          f"p50={s['p50_ms']:.1f}ms p99={s['p99_ms']:.1f}ms")
+    print(f"concurrent ({args.readers} readers + writer):     "
+          f"{c['reads_per_s']:.1f} reads/s  "
+          f"p50={c['p50_ms']:.1f}ms p99={c['p99_ms']:.1f}ms")
+    print(f"speedup: {cr['speedup_vs_serialized']:.2f}x "
+          f"(writer serialized/concurrent: "
+          f"{s['writer_ops']} / {c['writer_ops']})")
+    print(f"pool: {res['engine_stats']['buffer_pool']}")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,10 +14,16 @@ The contract (docs/ingestion.md "CI perf-gate contract"):
 * ``BENCH_lifecycle.json``: ``batch_save.reconstruction_parity`` must be
   true, and the one-transaction batch save must not be drastically slower
   than the per-model loop (``speedup_vs_sequential >= 0.8`` — fsync timing
-  on shared runners jitters, so only a clear loss fails).
+  on shared runners jitters, so only a clear loss fails);
+* ``BENCH_concurrency.json``: snapshot-isolated concurrent readers must
+  not lose to the global-lock serialized baseline measured in the same
+  run — ``concurrent_read.speedup_vs_serialized >= 1.0``. Coarse on
+  purpose (shared-runner core counts vary); the full acceptance bar is
+  2x with 4 readers, checked on dev machines / in BENCH_concurrency.json.
 
-Usage: ``python benchmarks/perf_gate.py BENCH_hnsw.json [BENCH_lifecycle.json]``
-Exits non-zero with a one-line reason per violated check.
+Usage: ``python benchmarks/perf_gate.py BENCH_hnsw.json [BENCH_lifecycle.json]
+[BENCH_concurrency.json]``. Exits non-zero with a one-line reason per
+violated check.
 """
 
 from __future__ import annotations
@@ -28,6 +34,7 @@ import sys
 KNOWN_SCHEMAS = {2}
 MIN_BATCH_INGEST_SPEEDUP = 1.0
 MIN_BATCH_SAVE_SPEEDUP = 0.8
+MIN_CONCURRENT_READ_SPEEDUP = 1.0
 
 
 def check_file(path: str) -> list[str]:
@@ -67,6 +74,21 @@ def check_file(path: str) -> list[str]:
     elif "delete" in res:
         errors.append(f"{path}: no batch_save section — batched save was "
                       "not measured")
+    if "concurrent_read" in res:
+        cr = res["concurrent_read"]
+        speedup = cr["speedup_vs_serialized"]
+        if speedup < MIN_CONCURRENT_READ_SPEEDUP:
+            errors.append(
+                f"{path}: concurrent readers lost to the global-lock "
+                f"baseline (speedup_vs_serialized={speedup:.2f} < "
+                f"{MIN_CONCURRENT_READ_SPEEDUP})")
+        else:
+            print(f"{path}: concurrent read {speedup:.2f}x vs serialized ok "
+                  f"({cr['concurrent']['reads_per_s']:.0f} reads/s, "
+                  f"p99={cr['concurrent']['p99_ms']:.0f}ms)")
+    elif "engine_stats" in res:
+        errors.append(f"{path}: no concurrent_read section — concurrency "
+                      "was not measured")
     return errors
 
 

@@ -1,9 +1,17 @@
 """NeurStore core: tensor-based storage engine, delta quantization, loader."""
 
+from .bufferpool import BufferPool, PageFrame
 from .catalog import Catalog, CatalogState, ModelEntry
 from .engine import DEFAULT_TAU, DEFAULT_TOLERANCE, SaveReport, StorageEngine
 from .hnsw import HNSWIndex, quantized_l2_batch
-from .loader import LoadedModel, PipelineLoader, materialize_many, reconstruct_jnp
+from .loader import (
+    LoadedModel,
+    ModelSnapshot,
+    PipelineLoader,
+    materialize_many,
+    reconstruct_jnp,
+)
+from .maintenance import MaintenanceDaemon
 from .quantize import (
     QuantMeta,
     delta_nbit,
@@ -17,13 +25,17 @@ from .quantize import (
 )
 
 __all__ = [
+    "BufferPool",
     "Catalog",
     "CatalogState",
     "DEFAULT_TAU",
     "DEFAULT_TOLERANCE",
     "HNSWIndex",
+    "MaintenanceDaemon",
     "ModelEntry",
+    "ModelSnapshot",
     "LoadedModel",
+    "PageFrame",
     "PipelineLoader",
     "QuantMeta",
     "SaveReport",

@@ -132,17 +132,27 @@ class ModelEntry:
 
 @dataclasses.dataclass
 class CatalogState:
-    """In-memory catalog: model table, id counter, vertex reference counts."""
+    """In-memory catalog: model table, id counter, vertex reference counts.
+
+    ``epoch`` is the snapshot-isolation clock: every committed snapshot
+    carries a strictly increasing epoch, bumped by :meth:`Catalog.save_snapshot`
+    at the writer's atomic ``meta.json`` commit point. Readers stamp the
+    epoch into their :class:`~repro.core.loader.ModelSnapshot` at load time
+    and never consult shared catalog state again (seed-format stores load
+    at epoch 0).
+    """
 
     models: dict[str, ModelEntry] = dataclasses.field(default_factory=dict)
     next_id: int = 0
     vertex_refs: dict[str, int] = dataclasses.field(default_factory=dict)
+    epoch: int = 0
 
     def to_dict(self) -> dict:
         return {
             "models": {n: e.to_dict() for n, e in self.models.items()},
             "next_id": self.next_id,
             "vertex_refs": self.vertex_refs,
+            "epoch": self.epoch,
         }
 
     @classmethod
@@ -154,6 +164,7 @@ class CatalogState:
             },
             next_id=int(d.get("next_id", 0)),
             vertex_refs={k: int(v) for k, v in d.get("vertex_refs", {}).items()},
+            epoch=int(d.get("epoch", 0)),
         )
 
 
@@ -225,7 +236,13 @@ class Catalog:
 
     # --------------------------------------------------------------- snapshot
     def save_snapshot(self) -> None:
-        """Atomically persist the catalog state — the transaction commit point."""
+        """Atomically persist the catalog state — the transaction commit point.
+
+        Bumps the snapshot-isolation epoch: every commit is a new epoch,
+        so a reader that captured its view before this call is observably
+        older than one opened after it.
+        """
+        self.state.epoch += 1
         tmp = self.meta_path + ".tmp"
         with open(tmp, "w") as f:
             json.dump(self.state.to_dict(), f)

@@ -41,6 +41,24 @@ Model lifecycle (this is what makes the engine a catalog, not an archive):
   journal commit. ``StorageEngine.__init__`` replays any interrupted
   transaction, leaving no orphan pages and no dangling ``vertex_refs``.
   See ``docs/lifecycle.md`` for the full state machine.
+
+Concurrent read path (this is what lets N readers serve while writers run;
+see ``docs/concurrency.md``):
+
+* all page bytes flow through one **buffer pool**
+  (``repro.core.bufferpool``): a byte-budgeted LRU of pinned frames whose
+  decoded payloads are shared across every handle over a page version;
+* ``load_model`` captures an epoch-stamped :class:`ModelSnapshot` (catalog
+  entry + pinned page frame + per-dim index references) in one short
+  critical section and **never takes the engine lock again** — writers
+  bump the epoch at their atomic ``meta.json`` commit point;
+* vacuum is **copy-on-write**: it compacts a clone of the index and
+  rewrites affected pages under *new* page names, so a reader that opened
+  before the vacuum keeps materializing bit-identically from its pinned
+  snapshot while later readers see the compacted store;
+* a background :class:`~repro.core.maintenance.MaintenanceDaemon` can run
+  incremental auto-vacuum and buffer-pool pressure trims off the write
+  path (``start_maintenance``).
 """
 
 from __future__ import annotations
@@ -49,11 +67,11 @@ import dataclasses
 import os
 import threading
 import time
-import weakref
-from collections import Counter, OrderedDict
+from collections import Counter, OrderedDict, deque
 
 import numpy as np
 
+from .bufferpool import BufferPool
 from .catalog import (
     STATUS_COMMITTED,
     STATUS_PENDING,
@@ -66,6 +84,7 @@ from .pages import (
     TensorPage,
     TensorRecord,
     encode_payload,
+    page_dim_keys,
     read_page_header,
     read_page_refs,
     read_record,
@@ -119,6 +138,31 @@ class SaveReport:
     @property
     def mean_nbit(self) -> float:
         return float(np.mean(self.nbits)) if self.nbits else 0.0
+
+
+class _Retry(Exception):
+    """Internal: snapshot capture raced a writer — retry the loop."""
+
+
+class _SnapshotRelease:
+    """GC-safe snapshot release: appends to the engine's release queue.
+
+    Runs from a ``weakref`` finalizer, possibly inside garbage collection
+    on an arbitrary thread — so it must not take any lock. ``deque.append``
+    is atomic; the engine drains the queue at its next operation boundary.
+    Holds the queue (not the engine) so a dropped engine can still be
+    collected.
+    """
+
+    __slots__ = ("queue", "token", "frame")
+
+    def __init__(self, queue, token, frame):
+        self.queue = queue
+        self.token = token
+        self.frame = frame
+
+    def __call__(self):
+        self.queue.append((self.token, self.frame))
 
 
 def _write_file_durable(path: str, data: bytes) -> None:
@@ -264,6 +308,18 @@ class _IndexCache:
                     self.dirty_flushes += 1
             self._dirty.clear()
 
+    def replace(self, dim: int, idx: HNSWIndex) -> None:
+        """Install ``idx`` as the resident index for ``dim`` (clean).
+
+        Copy-on-write vacuum compacts a clone and swaps it in here; the
+        previous object stays alive for the snapshots that captured it.
+        The clone was just written to disk, so it installs clean.
+        """
+        with self._lock:
+            self._live[dim] = idx
+            self._live.move_to_end(dim)
+            self._dirty.discard(dim)
+
     def stats(self) -> dict:
         """Cache counters for the benchmarks (hnsw_bench reports these)."""
         with self._lock:
@@ -296,6 +352,8 @@ class StorageEngine:
         tau: float = DEFAULT_TAU,
         cache_bytes: int = 32 << 30,
         ef_search: int = 32,
+        pool_bytes: int = 1 << 30,
+        auto_maintenance: bool = False,
     ):
         self.root = root
         os.makedirs(os.path.join(root, "pages"), exist_ok=True)
@@ -304,21 +362,30 @@ class StorageEngine:
         self.tau = tau
         self.ef_search = ef_search
         self.index_cache = _IndexCache(os.path.join(root, "index"), cache_bytes)
+        # Single path to page bytes: every load shares frames (and decoded
+        # payloads) here instead of re-reading files per handle.
+        self.page_pool = BufferPool(pool_bytes)
         self.catalog = Catalog(root)
         # (dim, vid) refs held by saves between ANN match and commit: keeps
         # a concurrent delete/vacuum from tombstoning a base an in-flight
         # page is about to reference.
         self._inflight: Counter = Counter()
-        # Open LoadedModel handles: vacuum renumbers vertex ids, so it must
-        # patch the base references of every live handle or they would
-        # silently dequantize another model's base after compaction.
-        self._open_loaders: "weakref.WeakSet" = weakref.WeakSet()
+        # Live reader snapshots: token → epoch. Handles release through
+        # _released (a GC-safe queue drained at operation boundaries), so
+        # stats() can report the oldest live snapshot and the pool can
+        # unpin frames promptly.
+        self._live_snapshots: dict[int, int] = {}
+        self._snap_token = 0
+        self._released: deque = deque()  # (token, frame) — append is atomic
         # Dims whose vacuum failed in-process (not a crash): the on-disk
         # index/pages/refs may be half-switched, so further use of the dim
         # must fail loudly until a reopen replays the journal.
         self._quarantined_dims: set[int] = set()
         self._lock = threading.RLock()
+        self.maintenance = None
         self._recover()
+        if auto_maintenance:
+            self.start_maintenance()
 
     # --------------------------------------------------------------- helpers
     @property
@@ -500,12 +567,22 @@ class StorageEngine:
         self._unlink(self._page_file(rec["page"]))
 
     def _recover_vacuum_rollback(self, rec: dict) -> None:
+        """No switch record: side files may be half-written, catalog is
+        untouched — discard the ``.vac`` index (new-named page side files
+        are unreferenced and fall to the orphan sweep)."""
         dim = rec["dim"]
         self._unlink(self.index_cache._path(dim) + ".vac")
         for page_name in rec.get("pages", []):
+            # Legacy in-place protocol (pre-concurrency stores) staged
+            # page rewrites as ``.vac`` side files under the same name.
             self._unlink(self._page_file(page_name) + ".vac")
 
     def _recover_vacuum_forward(self, switch: dict) -> None:
+        """Switch record present: every side file was durable before it,
+        so roll forward — re-point entries at the rewritten pages (a crash
+        before the snapshot switch leaves them on the old names), install
+        the compacted index, drop the old pages, replace the dim's refs
+        wholesale (idempotent)."""
         dim = switch["dim"]
         # An earlier replay step may have loaded the pre-compaction index
         # into the cache (and marked it dirty); drop it so the final flush
@@ -514,7 +591,13 @@ class StorageEngine:
         vac = self.index_cache._path(dim) + ".vac"
         if os.path.exists(vac):
             os.replace(vac, self.index_cache._path(dim))
+        for name, old_page, new_page in switch.get("moves", []):
+            entry = self.catalog.get(name)
+            if entry is not None and entry.page == old_page:
+                entry.page = new_page
+            self._unlink(self._page_file(old_page))
         for page_name in switch.get("pages", []):
+            # Legacy in-place protocol: swap the same-name side files in.
             pvac = self._page_file(page_name) + ".vac"
             if os.path.exists(pvac):
                 os.replace(pvac, self._page_file(page_name))
@@ -643,6 +726,7 @@ class StorageEngine:
         dropped, all under one journal transaction.
         """
         t0 = time.perf_counter()
+        self._drain_released()
         p = self.tolerance if tolerance is None else tolerance
         tau_ = self.tau if tau is None else tau
         # Grouping needs only names/shapes — no float64 upcast is made here.
@@ -773,6 +857,7 @@ class StorageEngine:
                     self._tombstone_unreferenced(old_refs)
                     self.index_cache.flush()
                     self._unlink(self._page_file(old.page))
+                    self.page_pool.invalidate(old.page)
                 self.catalog.commit_tx(tx)
                 self.index_cache.trim()
         finally:
@@ -970,6 +1055,7 @@ class StorageEngine:
                     if olds[mi]:
                         self._tombstone_unreferenced(old_refs[mi])
                         self._unlink(self._page_file(olds[mi].page))
+                        self.page_pool.invalidate(olds[mi].page)
                         dropped_old = True
                 if dropped_old:
                     self.index_cache.flush()
@@ -1003,6 +1089,7 @@ class StorageEngine:
     def delete_model(self, name: str) -> None:
         """Drop a model: journal intent → catalog commit → tombstone
         zero-ref vertices → unlink page. Crash-safe at every step."""
+        self._drain_released()
         with self._lock:
             entry = self.catalog.get(name)
             if entry is None or entry.status != STATUS_COMMITTED:
@@ -1027,6 +1114,7 @@ class StorageEngine:
             self.index_cache.flush()
             maybe_fail("delete.after_index_flush")
             self._unlink(self._page_file(entry.page))
+            self.page_pool.invalidate(entry.page)
             self.catalog.commit_tx(tx)
 
     def replace_model(
@@ -1050,19 +1138,27 @@ class StorageEngine:
     def vacuum(self, min_dead_fraction: float = 0.0, dims=None) -> dict:
         """Compact indexes whose dead-vertex fraction is ≥ the threshold.
 
-        Per dim: sweep (any vertex with zero catalog references becomes a
-        tombstone) → journal intent → ``HNSWIndex.compact()`` → write the
-        compacted index and every remapped page as ``.vac`` side files →
-        journal the switch record (with the full post-remap reference
-        table) → atomically swap the side files in → commit. Mid-vacuum
-        crashes roll forward from the switch record or roll back by
-        discarding side files. Every surviving model materializes
-        bit-identically before vs. after (vertex codes are copied verbatim
-        and page payloads are untouched).
+        Copy-on-write per dim: sweep (any vertex with zero catalog
+        references becomes a tombstone) → journal intent → compact a
+        **clone** of the index (the resident object, shared with snapshot
+        readers, is never restructured) → write the compacted index as a
+        ``.vac`` side file and every remapped page under a **new page
+        name** → journal the switch record (page moves + the full
+        post-remap reference table) → switch the catalog (entries point at
+        the new pages; refs replaced; atomic snapshot = commit point) →
+        install the index file and clone, unlink the old pages → commit.
+        Mid-vacuum crashes roll forward from the switch record (all side
+        files are durable before it) or roll back by discarding side
+        files. Every surviving model materializes bit-identically before
+        vs. after (vertex codes are copied verbatim and page payloads are
+        untouched), and readers that loaded *before* the vacuum keep
+        materializing from their pinned snapshot — old index object, old
+        page bytes — also bit-identically.
 
         Returns a report: per-dim dropped/live counts, pages rewritten,
         and dims skipped because an in-flight save holds references.
         """
+        self._drain_released()
         report: dict = {
             "dims": {},
             "skipped_dims": [],
@@ -1070,12 +1166,23 @@ class StorageEngine:
             "pages_rewritten": 0,
         }
         with self._lock:
-            # One scan per page for the whole vacuum: which dims each page
-            # references never changes (rewrites only renumber vertices).
-            dims_by_page: dict[str, set[int]] = {
-                entry.page: {d for d, _ in self._page_refs(entry.page)}
-                for entry in (self.catalog.get(n) for n in self.catalog.names())
-            }
+            # Lazy, one scan per page for the whole vacuum: which dims each
+            # page references never changes (rewrites only renumber
+            # vertices, renames are tracked below). Built only when some
+            # dim actually passes the dead-fraction threshold, so the
+            # maintenance daemon's steady-state no-op steps never pay a
+            # store-wide page header sweep under the engine lock.
+            dims_by_page_cache: list[dict[str, set[int]]] = []
+
+            def dims_by_page() -> dict[str, set[int]]:
+                if not dims_by_page_cache:
+                    dims_by_page_cache.append({
+                        entry.page: {d for d, _ in self._page_refs(entry.page)}
+                        for entry in (self.catalog.get(n)
+                                      for n in self.catalog.names())
+                    })
+                return dims_by_page_cache[0]
+
             for dim in (dims if dims is not None else self.index_cache.dims()):
                 if (
                     dim in self._quarantined_dims
@@ -1109,8 +1216,10 @@ class StorageEngine:
         idx: HNSWIndex,
         min_dead_fraction: float,
         report: dict,
-        dims_by_page: dict[str, set[int]],
+        page_map,
     ) -> None:
+        """``page_map`` is a lazy callable → {page_name: dims referenced};
+        only invoked past the threshold check so no-op sweeps stay cheap."""
         refs = self.catalog.refs_for_dim(dim)
         # Sweep: liveness is defined by the reference table, so orphan
         # vertices from crashed saves are collected here too.
@@ -1121,6 +1230,7 @@ class StorageEngine:
         dead = idx.dead_count
         if dead == 0 or idx.dead_fraction() < min_dead_fraction:
             return
+        dims_by_page = page_map()
         affected = [
             entry
             for entry in (
@@ -1134,69 +1244,201 @@ class StorageEngine:
             "pages": [e.page for e in affected],
         })
         maybe_fail("vacuum.after_intent")
-        remap = idx.compact()
-        _write_file_durable(self.index_cache._path(dim) + ".vac", idx.to_bytes())
-        rewritten: list[str] = []
+        # Copy-on-write: compact a clone. The resident object — shared
+        # with every snapshot captured before this point — keeps its rows
+        # and numbering, so concurrent readers stay lock-free and valid.
+        new_idx = idx.clone()
+        remap = new_idx.compact()
+        _write_file_durable(
+            self.index_cache._path(dim) + ".vac", new_idx.to_bytes()
+        )
+        moves: list[tuple[ModelEntry, str, str]] = []
         for entry in affected:
             with open(self._page_file(entry.page), "rb") as f:
                 buf = f.read()
             new_buf, changed = remap_page_vertices(buf, remap, dim)
             if changed:
-                _write_file_durable(self._page_file(entry.page) + ".vac", new_buf)
-                rewritten.append(entry.page)
+                # Generation ids come from the catalog's monotonic counter,
+                # but a pre-commit crash loses the allocation — skip any id
+                # whose page name already exists (e.g. our own current name
+                # after a replayed vacuum) so old and new never collide.
+                new_page = entry.page
+                while (new_page == entry.page
+                       or os.path.exists(self._page_file(new_page))):
+                    new_page = (
+                        f"model_{entry.model_id}"
+                        f".g{self.catalog.allocate_id()}.page"
+                    )
+                _write_file_durable(self._page_file(new_page), new_buf)
+                moves.append((entry, entry.page, new_page))
         maybe_fail("vacuum.after_sidefiles")
         new_refs = {str(remap[v]): c for v, c in refs.items() if c > 0}
         self.catalog.log(tx, {
             "op": "vacuum_switch",
             "dim": dim,
-            "pages": rewritten,
+            "moves": [[e.name, old, new] for e, old, new in moves],
             "refs": new_refs,
         })
         maybe_fail("vacuum.after_switch_log")
-        os.replace(self.index_cache._path(dim) + ".vac", self.index_cache._path(dim))
-        maybe_fail("vacuum.mid_switch")
-        for page_name in rewritten:
-            os.replace(
-                self._page_file(page_name) + ".vac", self._page_file(page_name)
-            )
+        # Catalog switch: entries point at the rewritten pages, the dim's
+        # reference table is renumbered, and the atomic snapshot commits
+        # both (bumping the reader-visible epoch).
+        for entry, old_page, new_page in moves:
+            entry.page = new_page
+            if old_page in dims_by_page:
+                dims_by_page[new_page] = dims_by_page.pop(old_page)
         self.catalog.set_dim_refs(dim, {int(v): c for v, c in new_refs.items()})
-        self.catalog.save_snapshot()
+        self.catalog.save_snapshot()  # ← commit point
+        maybe_fail("vacuum.mid_switch")
+        os.replace(self.index_cache._path(dim) + ".vac", self.index_cache._path(dim))
+        for _entry, old_page, _new_page in moves:
+            self._unlink(self._page_file(old_page))
+            self.page_pool.invalidate(old_page)
         self.catalog.commit_tx(tx)
-        # The resident object is exactly what was just written to disk.
-        self.index_cache.mark_clean(dim)
-        # Open handles hold old vertex ids — renumber them so they keep
-        # dequantizing the right base (a handle over a *deleted* model gets
-        # a poisoned id and fails loudly on next access).
-        for lm in list(self._open_loaders):
-            lm._apply_vertex_remap(dim, remap)
+        # Future loads see the compacted clone; snapshots keep the old one.
+        self.index_cache.replace(dim, new_idx)
         report["dims"][dim] = {
             "dropped": dead,
-            "live": len(idx),
-            "pages_rewritten": len(rewritten),
+            "live": len(new_idx),
+            "pages_rewritten": len(moves),
         }
         report["vertices_dropped"] += dead
-        report["pages_rewritten"] += len(rewritten)
+        report["pages_rewritten"] += len(moves)
 
     # ------------------------------------------------------------------ load
+    def _read_page_bytes(self, page_name: str) -> bytes:
+        with open(self._page_file(page_name), "rb") as f:
+            return f.read()
+
+    def _parse_frame(self, frame) -> TensorPage:
+        """Parsed-header cache on the frame (shared across handles)."""
+        page = frame.page
+        if page is None:
+            with frame.lock:
+                page = frame.page
+                if page is None:
+                    page = frame.page = read_page_header(frame.data)
+        return page
+
+    def _drain_released(self) -> None:
+        """Apply queued snapshot releases (GC finalizers only enqueue —
+        they must not take locks from inside garbage collection)."""
+        while True:
+            try:
+                token, frame = self._released.popleft()
+            except IndexError:
+                return
+            with self._lock:
+                self._live_snapshots.pop(token, None)
+            if frame is not None:
+                self.page_pool.unpin(frame)
+
     def open_page(self, name: str) -> tuple[TensorPage, ModelEntry]:
         with self._lock:
             entry = self.catalog.get(name)
             if entry is None or entry.status != STATUS_COMMITTED:
                 raise KeyError(name)
-            path = self._page_file(entry.page)
-        with open(path, "rb") as f:
-            page = read_page_header(f.read())
+            page_name = entry.page
+        frame = self.page_pool.get(
+            page_name, lambda: self._read_page_bytes(page_name)
+        )
+        try:
+            page = self._parse_frame(frame)
+        finally:
+            self.page_pool.unpin(frame)
         return page, entry
 
-    def load_model(self, name: str, bits: int | None = None):
-        """Compression-aware load — see :mod:`repro.core.loader`."""
-        from .loader import LoadedModel
+    def load_model(self, name: str, bits: int | None = None, *,
+                   shared_cache: bool = True):
+        """Compression-aware load — see :mod:`repro.core.loader`.
 
-        page, entry = self.open_page(name)
-        lm = LoadedModel(engine=self, page=page, info=entry, bits=bits)
-        with self._lock:
-            self._open_loaders.add(lm)
-        return lm
+        Returns a :class:`~repro.core.loader.LoadedModel` backed by an
+        epoch-stamped :class:`~repro.core.loader.ModelSnapshot`: after the
+        short capture critical section the handle never takes the engine
+        lock again, so concurrent writers (save/delete/replace/vacuum)
+        cannot stall — or invalidate — this reader. ``shared_cache=False``
+        bypasses the buffer pool (private page bytes and decoded payloads
+        — the pre-concurrency behaviour; the concurrency benchmark uses it
+        as the serialized baseline).
+        """
+        from .loader import LoadedModel, ModelSnapshot
+
+        self._drain_released()
+        for _attempt in range(64):
+            with self._lock:
+                entry = self.catalog.get(name)
+                if entry is None or entry.status != STATUS_COMMITTED:
+                    raise KeyError(name)
+                page_name = entry.page
+            # Page bytes + header parse + payload slicing run outside the
+            # engine lock: page files are immutable per *name* (vacuum
+            # rewrites copy-on-write under new names), so bytes read here
+            # are consistent with whatever entry we re-validate below.
+            frame = None
+            try:
+                if shared_cache:
+                    frame = self.page_pool.get(
+                        page_name, lambda: self._read_page_bytes(page_name)
+                    )
+                    page = self._parse_frame(frame)
+                else:
+                    page = read_page_header(self._read_page_bytes(page_name))
+                dims = page_dim_keys(page)
+            except FileNotFoundError:
+                # Raced a delete/replace/vacuum: re-read the entry. A frame
+                # returned by get() cannot be the raiser (its bytes loaded),
+                # but unpin defensively in case the parse path ever throws.
+                if frame is not None:
+                    self.page_pool.unpin(frame)
+                continue
+            except BaseException:
+                if frame is not None:
+                    self.page_pool.unpin(frame)  # corrupt page: no pin leak
+                raise
+            try:
+                with self._lock:
+                    cur = self.catalog.get(name)
+                    if (cur is None or cur.status != STATUS_COMMITTED
+                            or cur.page != page_name):
+                        raise _Retry
+                    for dim in dims:
+                        self._check_quarantine(dim)
+                    indexes: dict[int, HNSWIndex] = {}
+                    for dim in dims:
+                        idx = self.index_cache.get(dim)
+                        if idx is None:
+                            raise RuntimeError(
+                                f"model {name!r} references dim {dim} but no "
+                                "index exists for it (corrupt store?)"
+                            )
+                        indexes[dim] = idx
+                    epoch = self.catalog.state.epoch
+                    token = self._snap_token
+                    self._snap_token += 1
+                    self._live_snapshots[token] = epoch
+                    # The snapshot owns a COPY of the catalog row: vacuum
+                    # re-points the live entry's page at the rewritten
+                    # file, and an "immutable view" must keep naming the
+                    # page version it actually pinned.
+                    cur = dataclasses.replace(cur)
+            except _Retry:
+                if frame is not None:
+                    self.page_pool.unpin(frame)
+                continue
+            except BaseException:
+                if frame is not None:
+                    self.page_pool.unpin(frame)
+                raise
+            snap = ModelSnapshot(
+                epoch=epoch, entry=cur, frame=frame, indexes=indexes,
+                release=_SnapshotRelease(self._released, token, frame),
+            )
+            return LoadedModel(engine=self, page=page, info=cur, bits=bits,
+                               snapshot=snap)
+        raise RuntimeError(
+            f"load_model({name!r}): catalog kept changing under the capture "
+            "loop (writer livelock?)"
+        )
 
     def load_models(self, names, bits: int | None = None) -> list:
         """Open handles over several models (the multi-save counterpart).
@@ -1208,7 +1450,56 @@ class StorageEngine:
         """
         return [self.load_model(name, bits=bits) for name in names]
 
+    # ----------------------------------------------------------- maintenance
+    def start_maintenance(self, **kwargs):
+        """Start the background maintenance daemon (idempotent).
+
+        Keyword arguments are forwarded to
+        :class:`repro.core.maintenance.MaintenanceDaemon` (thresholds,
+        interval). Returns the daemon; ``close()`` stops it.
+        """
+        from .maintenance import MaintenanceDaemon
+
+        with self._lock:
+            if self.maintenance is None:
+                self.maintenance = MaintenanceDaemon(self, **kwargs)
+                self.maintenance.start()
+            return self.maintenance
+
+    def close(self) -> None:
+        """Stop background maintenance and release queued snapshot pins."""
+        daemon = self.maintenance
+        if daemon is not None:
+            daemon.stop()
+            self.maintenance = None
+        self._drain_released()
+
     # ------------------------------------------------------------ accounting
+    def stats(self) -> dict:
+        """Engine-wide concurrency counters (asserted by the tests).
+
+        ``buffer_pool``: page-frame hits/misses/evictions, resident and
+        pinned bytes, shared-decode hit rate. ``epoch``: the current
+        snapshot-isolation epoch (bumped at every writer commit).
+        ``snapshots``: live reader snapshots and the oldest epoch still
+        pinned. ``index_cache``: the existing HNSW cache counters.
+        """
+        self._drain_released()
+        with self._lock:
+            live = list(self._live_snapshots.values())
+            out = {
+                "epoch": self.catalog.state.epoch,
+                "snapshots": {
+                    "live": len(live),
+                    "oldest_epoch": min(live) if live else None,
+                },
+                "buffer_pool": self.page_pool.stats(),
+                "index_cache": self.index_cache.stats(),
+            }
+            if self.maintenance is not None:
+                out["maintenance"] = self.maintenance.stats()
+            return out
+
     def list_models(self) -> list[str]:
         return self.catalog.names()
 

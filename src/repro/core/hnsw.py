@@ -787,6 +787,18 @@ class HNSWIndex:
         return list(range(n0, n0 + b))
 
     # ------------------------------------------------------------ compaction
+    def clone(self) -> "HNSWIndex":
+        """Deep copy for copy-on-write compaction.
+
+        Vacuum compacts the clone and installs it as the resident index;
+        the original object — shared with snapshot readers that captured
+        it at load time — is never restructured, so their
+        :meth:`vertex_codes` reads stay valid without any lock. (Like
+        eviction+reload, the clone restarts the level RNG; graph shape
+        after later inserts may differ, data never does.)
+        """
+        return HNSWIndex.from_bytes(self.to_bytes())
+
     def compact(self) -> dict[int, int]:
         """Drop tombstoned vertices; returns the old→new vertex-id remap.
 

@@ -19,12 +19,27 @@ Three paper mechanisms, adapted from ONNX-graph surgery to JAX:
   copy once every sharing record has consumed it.
 * **Pipelining** (§4.3.3) — :class:`PipelineLoader` overlaps page I/O,
   de-quantization and consumption in a 3-stage thread pipeline.
+
+Concurrency model (the snapshot-isolation PR; see ``docs/concurrency.md``):
+
+Every handle is backed by a :class:`ModelSnapshot` — an epoch-stamped
+immutable view (catalog entry, pinned buffer-pool page frame, per-dim
+HNSW index references) captured under the engine lock at ``load_model``
+time. After capture, **no read path takes the engine lock**: page bytes
+are pinned and immutable, decoded payloads live in the frame's shared
+cache, and base codes come from the snapshot's index objects, whose
+existing rows are never restructured (vacuum compacts copy-on-write
+clones; saves only append). A handle opened before a concurrent
+``replace_model``/``delete_model``/``vacuum`` therefore keeps
+materializing its weights bit-identically from the snapshot; a handle
+opened after the writer's commit sees the new state.
 """
 
 from __future__ import annotations
 
 import queue
 import threading
+import weakref
 from collections import Counter
 
 import numpy as np
@@ -32,7 +47,10 @@ import numpy as np
 from .pages import TensorPage, TensorRecord, decode_payload, read_record, read_record_partial
 from .quantize import dequantize_delta, dequantize_linear
 
-__all__ = ["LoadedModel", "PipelineLoader", "materialize_many", "reconstruct_jnp"]
+__all__ = [
+    "LoadedModel", "ModelSnapshot", "PipelineLoader", "materialize_many",
+    "reconstruct_jnp",
+]
 
 
 def reconstruct_jnp(base_codes, base_scale, base_zp, qdelta, delta_scale, delta_zp):
@@ -48,16 +66,50 @@ def reconstruct_jnp(base_codes, base_scale, base_zp, qdelta, delta_scale, delta_
     return base + delta
 
 
+class ModelSnapshot:
+    """Epoch-stamped immutable view of one model, captured at load time.
+
+    Holds everything a reader needs so that no later access touches shared
+    mutable engine state: the committed catalog entry, the pinned page
+    frame (``None`` for ``shared_cache=False`` loads, whose bytes are
+    private), and strong references to the HNSW index objects for every
+    dim the model's records use. Released explicitly via :meth:`close` or
+    automatically when the handle is garbage collected (a ``weakref``
+    finalizer enqueues the release; the engine drains the queue at its
+    next operation boundary — never from inside GC, where lock state is
+    unknowable).
+    """
+
+    __slots__ = ("epoch", "entry", "frame", "indexes", "_finalizer", "__weakref__")
+
+    def __init__(self, epoch, entry, frame, indexes, release):
+        self.epoch = epoch
+        self.entry = entry
+        self.frame = frame
+        self.indexes = indexes
+        # release() must not reference self (it would keep the snapshot
+        # alive); it enqueues (token, frame) on the engine's release queue.
+        self._finalizer = weakref.finalize(self, release)
+
+    def close(self) -> None:
+        """Release the snapshot's pins (idempotent)."""
+        self._finalizer()
+
+
 class LoadedModel:
     """Handle over one stored model, loaded without full decompression."""
 
-    def __init__(self, engine, page: TensorPage, info: dict, bits: int | None = None):
+    def __init__(self, engine, page: TensorPage, info: dict,
+                 bits: int | None = None,
+                 snapshot: ModelSnapshot | None = None):
         self.engine = engine
         self.page = page
         self.info = info
         self.bits = bits
+        self.snapshot = snapshot
         self._records: dict[str, TensorRecord] = {}
         self._order: list[str] = []
+        self._index_of: dict[str, int] = {}
         # Records are read with packed payloads only (decode=False): the
         # vectorized planar bit-unpack runs lazily on first tensor access,
         # so open-time cost is header parsing + payload slicing and the
@@ -69,6 +121,7 @@ class LoadedModel:
                 else read_record(page, i, decode=False)
             )
             self._records[rec.name] = rec
+            self._index_of[rec.name] = i
             self._order.append(rec.name)
         # Share counts: how many records reference each base vertex. The
         # immutable counts stay in _share; _remaining is the per-pass
@@ -76,6 +129,9 @@ class LoadedModel:
         self._share = Counter((r.dim_key, r.vertex_id) for r in self._records.values())
         self._remaining: dict[tuple[int, int], int] = dict(self._share)
         self._deq_base: dict[tuple[int, int], np.ndarray] = {}
+        # Guards the handle-local caches above when one handle is shared
+        # across threads. Never held around O(dim) work.
+        self._cache_lock = threading.Lock()
 
     # ------------------------------------------------------------- metadata
     @property
@@ -85,70 +141,70 @@ class LoadedModel:
     def tensor_names(self) -> list[str]:
         return list(self._order)
 
+    def close(self) -> None:
+        """Release the underlying snapshot (pins drop immediately)."""
+        if self.snapshot is not None:
+            self.snapshot.close()
+            self.engine._drain_released()
+
     def _ensure_decoded(self, rec: TensorRecord) -> TensorRecord:
-        if rec.qdelta is None:
+        """Unpack a record's payload, sharing the decoded codes across every
+        handle over the same page version through the frame cache."""
+        if rec.qdelta is not None:
+            return rec
+        frame = self.snapshot.frame if self.snapshot is not None else None
+        if frame is None:
             rec.qdelta = decode_payload(rec)
+            return rec
+        key = (self._index_of[rec.name], self.bits)
+        arr = frame.decoded.get(key)  # lock-free read (GIL-atomic dict get)
+        if arr is None:
+            fresh = decode_payload(rec)
+            fresh.setflags(write=False)  # shared across handles: never mutated
+            inserted = False
+            with frame.lock:
+                arr = frame.decoded.get(key)
+                if arr is None:
+                    frame.decoded[key] = arr = fresh
+                    inserted = True
+            self.engine.page_pool.decoded_misses += 1
+            if inserted:
+                self.engine.page_pool.note_extra(frame, arr.nbytes)
+        else:
+            self.engine.page_pool.decoded_hits += 1
+        rec.qdelta = arr
         return rec
 
     def record(self, name: str) -> TensorRecord:
         return self._ensure_decoded(self._records[name])
 
-    def _apply_vertex_remap(self, dim: int, remap: dict[int, int]) -> None:
-        """Engine callback after index compaction (vacuum): renumber this
-        handle's base references so it stays valid across the remap. A
-        record whose base was dropped — its model was deleted while this
-        handle stayed open — is poisoned with id -1 and raises on access.
-        """
-        changed = False
-        for rec in self._records.values():
-            if rec.dim_key == dim:
-                rec.vertex_id = remap.get(rec.vertex_id, -1)
-                changed = True
-        if not changed:
-            return
-
-        def rekey(d):
-            return {
-                (k if k[0] != dim else (dim, remap.get(k[1], -1))): v
-                for k, v in d.items()
-            }
-
-        self._share = Counter(rekey(self._share))
-        self._remaining = rekey(self._remaining)
-        self._deq_base = rekey(self._deq_base)
-
     # ------------------------------------------------- on-demand decompress
+    def _index_for(self, rec: TensorRecord):
+        if self.snapshot is not None:
+            return self.snapshot.indexes[rec.dim_key]
+        # Legacy path (no snapshot): consult the live cache under the lock.
+        with self.engine._lock:
+            self.engine._check_quarantine(rec.dim_key)
+            return self.engine.index_cache.get(rec.dim_key)
+
     def _base(self, rec: TensorRecord) -> np.ndarray:
         """De-quantize a base once per pass; free when every sharer has read it.
 
-        The countdown resets to the full share count when it drains, so the
-        cache is correct across repeated ``tensor(name)`` calls and multiple
-        ``materialize()`` passes (the seed's one-shot drain counter went
-        negative and re-dequantized shared bases on every later access).
+        Lock-free against the engine: base codes come from the snapshot's
+        index object, whose rows [0, n) are never moved or renumbered
+        (saves append; vacuum compacts a copy-on-write clone and installs
+        it for *future* snapshots). The countdown resets to the full share
+        count when it drains, so the cache is correct across repeated
+        ``tensor(name)`` calls and multiple ``materialize()`` passes.
         """
-        # The engine lock makes the id-read + codes-row fetch atomic
-        # against vacuum's in-place compaction (which moves rows and
-        # renumbers this handle's records); the O(dim) de-quantization
-        # itself runs outside the lock on a private copy of the row.
-        with self.engine._lock:
-            self.engine._check_quarantine(rec.dim_key)
-            if rec.vertex_id < 0:
-                raise KeyError(
-                    f"base of tensor {rec.name!r} was vacuumed away: the "
-                    "model was deleted while this handle was open"
-                )
-            base = self._deq_base.get((rec.dim_key, rec.vertex_id))
-            codes = meta = None
-            if base is None:
-                index = self.engine.index_cache.get(rec.dim_key)
-                codes, meta = index.vertex_codes(rec.vertex_id)
-                codes = codes.copy()  # row view into arrays compact() moves
+        key = (rec.dim_key, rec.vertex_id)
+        with self._cache_lock:
+            base = self._deq_base.get(key)
         if base is None:
-            base = dequantize_linear(codes, meta)
-        with self.engine._lock:
-            # Re-derive the key: a vacuum between the two critical sections
-            # may have renumbered the record (the base bytes are unchanged).
-            key = (rec.dim_key, rec.vertex_id)
+            index = self._index_for(rec)
+            codes, meta = index.vertex_codes(rec.vertex_id)
+            base = dequantize_linear(codes, meta)  # O(dim), outside all locks
+        with self._cache_lock:
             if key not in self._deq_base and self._share.get(key, 0) > 1:
                 self._deq_base[key] = base
             left = self._remaining.get(key, 1) - 1
@@ -182,16 +238,8 @@ class LoadedModel:
         out = {}
         for name in self._order:
             rec = self._ensure_decoded(self._records[name])
-            with self.engine._lock:  # atomic vs vacuum's in-place compact
-                self.engine._check_quarantine(rec.dim_key)
-                if rec.vertex_id < 0:
-                    raise KeyError(
-                        f"base of tensor {rec.name!r} was vacuumed away: "
-                        "the model was deleted while this handle was open"
-                    )
-                index = self.engine.index_cache.get(rec.dim_key)
-                codes, bmeta = index.vertex_codes(rec.vertex_id)
-                codes = codes.copy()
+            index = self._index_for(rec)
+            codes, bmeta = index.vertex_codes(rec.vertex_id)
             # int8-safe recentring for the TPU kernels: uint8 codes c with
             # zero-point z dequantize identically as (c-128) with (z-128),
             # and (c-128) fits int8 exactly. Only valid when nbit <= 8 —
@@ -225,44 +273,36 @@ def materialize_many(models: list["LoadedModel"]) -> list[dict[str, np.ndarray]]
     share accounting is untouched — the seeded copy drains through the
     normal countdown, so repeated materialize passes behave exactly as
     before. Returns one ``{name: tensor}`` dict per handle, in order.
+
+    Entirely lock-free against the engine: each handle's snapshot pins its
+    index objects, so two handles share a base iff they reference the same
+    vertex id in the *same index object* (handles that straddle a vacuum
+    hold different index versions and correctly do not share).
     """
-    # Group by live record objects, not snapshotted (dim, vid) keys: a
-    # concurrent vacuum renumbers vertex ids in place via
-    # _apply_vertex_remap, so every id read AND the codes fetch must share
-    # one critical section, and the seed below re-derives each key from
-    # the record at seed time (the same two-phase discipline as
-    # LoadedModel._base — base *bytes* are invariant across compaction,
-    # only the numbering moves).
-    by_engine: dict[int, list[LoadedModel]] = {}
+    groups: dict[tuple, list[tuple[LoadedModel, TensorRecord]]] = {}
     for lm in models:
-        by_engine.setdefault(id(lm.engine), []).append(lm)
-    for lms in by_engine.values():
-        engine = lms[0].engine
-        with engine._lock:
-            groups: dict[tuple[int, int], list[tuple[LoadedModel, TensorRecord]]] = {}
-            for lm in lms:
-                seen: set[tuple[int, int]] = set()
-                for rec in lm._records.values():
-                    key = (rec.dim_key, rec.vertex_id)
-                    if rec.vertex_id >= 0 and key not in seen:
-                        seen.add(key)
-                        groups.setdefault(key, []).append((lm, rec))
-            fetched = []
-            for (dim, vid), holders in groups.items():
-                if len(holders) < 2:
-                    continue  # shared within one handle only: _base caches it
-                engine._check_quarantine(dim)
-                index = engine.index_cache.get(dim)
-                codes, meta = index.vertex_codes(vid)
-                fetched.append((holders, codes.copy(), meta))
-        for holders, codes, meta in fetched:
-            base = dequantize_linear(codes, meta)
-            with engine._lock:
-                for lm, rec in holders:
-                    if rec.vertex_id >= 0:  # key re-derived post-any-remap
-                        lm._deq_base.setdefault(
-                            (rec.dim_key, rec.vertex_id), base
-                        )
+        seen: set[tuple] = set()
+        for rec in lm._records.values():
+            if rec.vertex_id < 0:
+                continue
+            idx = (lm.snapshot.indexes.get(rec.dim_key)
+                   if lm.snapshot is not None else None)
+            if idx is None:
+                continue
+            key = (id(idx), rec.vertex_id)
+            if key not in seen:
+                seen.add(key)
+                groups.setdefault(key, []).append((lm, rec))
+    for holders in groups.values():
+        if len(holders) < 2:
+            continue  # shared within one handle only: _base caches it
+        lm0, rec0 = holders[0]
+        index = lm0.snapshot.indexes[rec0.dim_key]
+        codes, meta = index.vertex_codes(rec0.vertex_id)
+        base = dequantize_linear(codes, meta)
+        for lm, rec in holders:
+            with lm._cache_lock:
+                lm._deq_base.setdefault((rec.dim_key, rec.vertex_id), base)
     return [lm.materialize() for lm in models]
 
 

@@ -1,0 +1,134 @@
+"""Background maintenance daemon — incremental auto-vacuum + pool trims.
+
+The write path never has to stop the world to reclaim space: a daemon
+thread watches the store and does one small increment of work per step,
+yielding the engine lock between steps so reader snapshots and writer
+commits interleave freely.
+
+Each :meth:`MaintenanceDaemon.step` does exactly:
+
+1. **one dim-group of auto-vacuum** — round-robin over the index dims,
+   calling ``engine.vacuum(min_dead_fraction=…, dims=[dim])`` for the
+   single dim under the cursor. The engine's vacuum already skips dims
+   with in-flight saves and is copy-on-write, so a step never invalidates
+   a live reader; the dead-vertex threshold keeps steps cheap until
+   enough garbage accrues to be worth a compaction.
+2. **buffer-pool pressure trim** — when resident bytes exceed the high
+   watermark, evict unpinned frames back down to it.
+3. **index-cache trim** — the existing commit-boundary budget enforcement,
+   run off the write path too so a read-only workload also converges.
+
+Tests drive ``step()`` synchronously for determinism; ``start()`` spawns
+the daemon thread that calls it every ``interval_s`` seconds (errors are
+counted and remembered, never raised into the thread — a failing
+maintenance pass must not kill the daemon).
+"""
+
+from __future__ import annotations
+
+import threading
+
+__all__ = ["MaintenanceDaemon"]
+
+
+class MaintenanceDaemon:
+    """Incremental auto-vacuum + cache-pressure trims for a StorageEngine."""
+
+    def __init__(
+        self,
+        engine,
+        dead_fraction: float = 0.25,
+        interval_s: float = 1.0,
+        pool_high_watermark: float = 0.9,
+    ):
+        self.engine = engine
+        self.dead_fraction = float(dead_fraction)
+        self.interval_s = float(interval_s)
+        self.pool_high_watermark = float(pool_high_watermark)
+        self._cursor = 0
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self._lock = threading.Lock()  # one step at a time (thread + tests)
+        self.steps = 0
+        self.vacuumed_vertices = 0
+        self.pages_rewritten = 0
+        self.pool_bytes_trimmed = 0
+        self.errors = 0
+        self.last_error: str | None = None
+
+    # ------------------------------------------------------------- stepping
+    def step(self) -> dict:
+        """One deterministic maintenance increment (see module docstring)."""
+        with self._lock:
+            report = {
+                "dim_checked": None,
+                "vertices_dropped": 0,
+                "pages_rewritten": 0,
+                "pool_bytes_trimmed": 0,
+            }
+            engine = self.engine
+            engine._drain_released()
+            dims = engine.index_cache.dims()
+            if dims:
+                self._cursor %= len(dims)
+                dim = dims[self._cursor]
+                self._cursor += 1
+                report["dim_checked"] = dim
+                rep = engine.vacuum(
+                    min_dead_fraction=self.dead_fraction, dims=[dim]
+                )
+                report["vertices_dropped"] = rep["vertices_dropped"]
+                report["pages_rewritten"] = rep["pages_rewritten"]
+                self.vacuumed_vertices += rep["vertices_dropped"]
+                self.pages_rewritten += rep["pages_rewritten"]
+            pool = engine.page_pool
+            target = int(pool.budget * self.pool_high_watermark)
+            if pool.resident_bytes() > target:
+                trimmed = pool.trim(target)
+                report["pool_bytes_trimmed"] = trimmed
+                self.pool_bytes_trimmed += trimmed
+            engine.index_cache.trim()
+            self.steps += 1
+            return report
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            return
+        self._stop.clear()
+        self._thread = threading.Thread(
+            target=self._run, name="neurstore-maintenance", daemon=True
+        )
+        self._thread.start()
+
+    def stop(self, timeout: float = 10.0) -> None:
+        self._stop.set()
+        t = self._thread
+        if t is not None:
+            t.join(timeout)
+        self._thread = None
+
+    @property
+    def running(self) -> bool:
+        t = self._thread
+        return t is not None and t.is_alive()
+
+    def _run(self) -> None:
+        while not self._stop.wait(self.interval_s):
+            try:
+                self.step()
+            except Exception as exc:  # counted, never fatal to the daemon
+                self.errors += 1
+                self.last_error = repr(exc)
+
+    # ---------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        return {
+            "running": self.running,
+            "steps": self.steps,
+            "vacuumed_vertices": self.vacuumed_vertices,
+            "pages_rewritten": self.pages_rewritten,
+            "pool_bytes_trimmed": self.pool_bytes_trimmed,
+            "errors": self.errors,
+            "last_error": self.last_error,
+        }

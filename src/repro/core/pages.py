@@ -29,7 +29,7 @@ from .quantize import QuantMeta
 __all__ = [
     "TensorRecord", "TensorPage", "write_page", "read_page_header",
     "read_record", "read_record_partial", "encode_payload", "decode_payload",
-    "read_page_refs", "remap_page_vertices",
+    "read_page_refs", "remap_page_vertices", "page_dim_keys",
 ]
 
 _MAGIC = b"NSPG"
@@ -205,6 +205,21 @@ def read_page_refs(f) -> list[tuple[int, int]]:
         vertex, dim = struct.unpack("<qQ", f.read(16))
         refs.append((int(dim), int(vertex)))
     return refs
+
+
+def page_dim_keys(page: TensorPage) -> set[int]:
+    """Distinct ``dim_key`` values referenced by a parsed page.
+
+    Header-field reads only (no payload touch): snapshot capture uses this
+    to know which HNSW indexes a model's records need *before* any tensor
+    is reconstructed, so the index references can be pinned into the
+    snapshot in one short critical section.
+    """
+    buf = page.buf
+    return {
+        struct.unpack_from("<qQ", buf, o + _VERTEX_OFF)[1]
+        for o, _l in page.offsets
+    }
 
 
 def remap_page_vertices(buf: bytes, remap: dict[int, int], dim_key: int) -> tuple[bytes, bool]:
