@@ -35,6 +35,7 @@ KNOWN_SCHEMAS = {2}
 MIN_BATCH_INGEST_SPEEDUP = 1.0
 MIN_BATCH_SAVE_SPEEDUP = 0.8
 MIN_CONCURRENT_READ_SPEEDUP = 1.0
+MIN_CHECKSUM_RATIO = 0.9
 
 
 def check_file(path: str) -> list[str]:
@@ -89,6 +90,21 @@ def check_file(path: str) -> list[str]:
     elif "engine_stats" in res:
         errors.append(f"{path}: no concurrent_read section — concurrency "
                       "was not measured")
+    if "checksum_overhead" in res:
+        co = res["checksum_overhead"]
+        for which in ("save", "load"):
+            ratio = co[f"{which}_ratio"]
+            if ratio < MIN_CHECKSUM_RATIO:
+                errors.append(
+                    f"{path}: checksummed {which} throughput fell below "
+                    f"{MIN_CHECKSUM_RATIO:.0%} of checksum-off "
+                    f"({which}_ratio={ratio:.3f})")
+            else:
+                print(f"{path}: {which} with checksums {ratio:.3f}x of "
+                      "checksum-off ok")
+    elif "durability" in path:
+        errors.append(f"{path}: no checksum_overhead section — the "
+                      "integrity tax was not measured")
     return errors
 
 

@@ -3,7 +3,16 @@
 from .bufferpool import BufferPool, PageFrame
 from .catalog import Catalog, CatalogState, ModelEntry
 from .engine import DEFAULT_TAU, DEFAULT_TOLERANCE, SaveReport, StorageEngine
+from .faultfs import FaultCrash, FaultFS, FaultInjected, FaultPlan
 from .hnsw import HNSWIndex, quantized_l2_batch
+from .integrity import (
+    CorruptIndexError,
+    CorruptJournalError,
+    CorruptMetaError,
+    CorruptPageError,
+    IntegrityError,
+    ReadOnlyStoreError,
+)
 from .loader import (
     LoadedModel,
     ModelSnapshot,
@@ -28,9 +37,19 @@ __all__ = [
     "BufferPool",
     "Catalog",
     "CatalogState",
+    "CorruptIndexError",
+    "CorruptJournalError",
+    "CorruptMetaError",
+    "CorruptPageError",
     "DEFAULT_TAU",
     "DEFAULT_TOLERANCE",
+    "FaultCrash",
+    "FaultFS",
+    "FaultInjected",
+    "FaultPlan",
     "HNSWIndex",
+    "IntegrityError",
+    "ReadOnlyStoreError",
     "MaintenanceDaemon",
     "ModelEntry",
     "ModelSnapshot",

@@ -50,7 +50,23 @@ across the batch, keyed off the first member's presence in the snapshot.
 Fault injection: tests add point names to :data:`FAILPOINTS`;
 :func:`maybe_fail` raises :class:`InjectedCrash` at matching points inside
 the engine's lifecycle operations, simulating a crash between any two
-protocol steps.
+protocol steps. The I/O layer below those steps is additionally faultable
+through :class:`~repro.core.faultfs.FaultFS` — all catalog file access
+routes through the engine's shim instance.
+
+Integrity (this layer's additions — see ``docs/durability.md``):
+
+* every journal record embeds a self-CRC (``integrity.journal_line``) and
+  ``meta.json`` carries a whole-snapshot CRC stamp, both verified on read;
+* a contiguous *suffix* of damaged journal lines is a torn tail (crash
+  mid-append) — tolerated by :meth:`Catalog.pending` and physically
+  truncated by :meth:`Catalog.recover_journal` at open; a damaged record
+  *followed by a valid one* means the journal body is corrupt and raises
+  :class:`~repro.core.integrity.CorruptJournalError` (the engine degrades
+  to read-only rather than replay guesses);
+* :meth:`Catalog.save_snapshot` first copies the current ``meta.json`` to
+  ``meta.json.prev`` (durable) before replacing it, so a snapshot that is
+  later found corrupt can fall back to the last good one (read-only).
 """
 
 from __future__ import annotations
@@ -59,6 +75,16 @@ import dataclasses
 import json
 import os
 
+from .faultfs import FaultFS
+from .integrity import (
+    CorruptJournalError,
+    CorruptMetaError,
+    journal_line,
+    meta_payload,
+    parse_journal_record,
+    parse_meta,
+)
+
 __all__ = [
     "Catalog",
     "CatalogState",
@@ -66,12 +92,15 @@ __all__ = [
     "ModelEntry",
     "STATUS_COMMITTED",
     "STATUS_PENDING",
+    "STATUS_CORRUPT",
     "FAILPOINTS",
     "maybe_fail",
+    "read_journal",
 ]
 
 STATUS_COMMITTED = "committed"
 STATUS_PENDING = "pending"
+STATUS_CORRUPT = "corrupt"
 
 # ------------------------------------------------------------ fault injection
 FAILPOINTS: set[str] = set()
@@ -172,18 +201,101 @@ def _ref_key(dim: int, vid: int) -> str:
     return f"{dim}:{vid}"
 
 
+def read_journal(path: str) -> tuple[list[dict], int, int | None, str | None]:
+    """Parse + verify a journal file without mutating anything.
+
+    Returns ``(records, max_tx, torn_offset, corrupt_reason)``: the valid
+    records in file order, the highest tx id seen, the byte offset where a
+    torn tail starts (``None`` if the file ends cleanly), and a reason
+    string when a damaged record *precedes* a valid one (body corruption —
+    replay would be unsound). Appends only ever damage the tail, so any
+    contiguous damaged suffix is classified as torn.
+    """
+    if not os.path.exists(path):
+        return [], 0, None, None
+    with open(path, "rb") as f:
+        raw = f.read()
+    records: list[dict] = []
+    max_tx = 0
+    bad_offset: int | None = None
+    corrupt: str | None = None
+    pos = 0
+    for chunk in raw.split(b"\n"):
+        start = pos
+        pos += len(chunk) + 1
+        if not chunk.strip():
+            continue
+        try:
+            rec = parse_journal_record(chunk.decode("utf-8"))
+        except (ValueError, UnicodeDecodeError):
+            if bad_offset is None:
+                bad_offset = start
+            continue
+        if bad_offset is not None and corrupt is None:
+            corrupt = (
+                f"damaged record at byte {bad_offset} precedes a valid record"
+            )
+        records.append(rec)
+        max_tx = max(max_tx, int(rec.get("tx", 0)))
+    return records, max_tx, bad_offset, corrupt
+
+
+def _group_pending(records: list[dict]) -> list[list[dict]]:
+    groups: dict[int, list[dict]] = {}
+    committed: set[int] = set()
+    for rec in records:
+        tx = int(rec.get("tx", 0))
+        if rec.get("op") == "commit":
+            committed.add(tx)
+        else:
+            groups.setdefault(tx, []).append(rec)
+    return [recs for tx, recs in sorted(groups.items()) if tx not in committed]
+
+
 class Catalog:
     """Snapshot + journal manager. All mutation goes through the engine lock."""
 
-    def __init__(self, root: str):
+    def __init__(self, root: str, fs: FaultFS | None = None):
         self.root = root
+        self.fs = fs if fs is not None else FaultFS()
         self.meta_path = os.path.join(root, "meta.json")
+        self.prev_path = self.meta_path + ".prev"
         self.journal_path = os.path.join(root, "journal.jsonl")
         self.state = CatalogState()
-        if os.path.exists(self.meta_path):
-            with open(self.meta_path) as f:
-                self.state = CatalogState.from_dict(json.load(f))
+        # Set when meta.json was corrupt and state came from meta.json.prev
+        # — the engine must degrade to read-only (the view may be stale).
+        self.meta_fallback: str | None = None
+        self._load_state()
         self._next_tx = 1
+
+    def _load_state(self) -> None:
+        if os.path.exists(self.meta_path):
+            try:
+                self.state = CatalogState.from_dict(parse_meta(
+                    self.fs.read_text(self.meta_path, site="meta.read"),
+                    self.meta_path,
+                ))
+                return
+            except (CorruptMetaError, UnicodeDecodeError) as exc:
+                # A bit flip can damage the UTF-8 encoding itself before
+                # the CRC is even consulted — same corruption, same path.
+                primary: Exception = exc
+        elif os.path.exists(self.prev_path):
+            primary = CorruptMetaError(
+                f"{self.meta_path}: missing, but a prev snapshot exists"
+            )
+        else:
+            return  # fresh store
+        try:
+            self.state = CatalogState.from_dict(parse_meta(
+                self.fs.read_text(self.prev_path, site="meta.read_prev"),
+                self.prev_path,
+            ))
+        except (CorruptMetaError, UnicodeDecodeError, OSError) as exc:
+            raise CorruptMetaError(
+                f"catalog unrecoverable: {primary}; fallback failed: {exc}"
+            ) from exc
+        self.meta_fallback = str(primary)
 
     # ----------------------------------------------------------- model table
     def get(self, name: str) -> ModelEntry | None:
@@ -195,6 +307,13 @@ class Catalog:
         return [
             n for n, e in self.state.models.items()
             if e.status == STATUS_COMMITTED
+        ]
+
+    def corrupt_names(self) -> list[str]:
+        """Models quarantined after failing an integrity check."""
+        return [
+            n for n, e in self.state.models.items()
+            if e.status == STATUS_CORRUPT
         ]
 
     def allocate_id(self) -> int:
@@ -241,14 +360,28 @@ class Catalog:
         Bumps the snapshot-isolation epoch: every commit is a new epoch,
         so a reader that captured its view before this call is observably
         older than one opened after it.
+
+        Before replacing ``meta.json`` the current bytes are copied to
+        ``meta.json.prev`` (durably, best-effort), so a later corruption
+        of the live snapshot degrades to last-good read-only instead of
+        an unopenable store. The new snapshot carries a whole-file CRC
+        stamp (``integrity.meta_payload``).
         """
         self.state.epoch += 1
+        if os.path.exists(self.meta_path):
+            try:
+                prev = self.fs.read_bytes(self.meta_path, site="meta.read")
+            except OSError:
+                prev = None
+            if prev is not None:
+                try:
+                    self.fs.write_durable(self.prev_path, prev, site="meta.prev")
+                except OSError:
+                    pass  # fallback copy is best-effort; the commit is not
         tmp = self.meta_path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(self.state.to_dict(), f)
-            f.flush()
-            os.fsync(f.fileno())
-        os.replace(tmp, self.meta_path)
+        payload = meta_payload(self.state.to_dict()).encode("utf-8")
+        self.fs.write_durable(tmp, payload, site="meta.tmp")
+        self.fs.replace(tmp, self.meta_path, site="meta.replace")
 
     def snapshot_dict(self) -> dict:
         """Legacy ``_meta``-shaped read-only view of the catalog state."""
@@ -256,11 +389,9 @@ class Catalog:
 
     # ---------------------------------------------------------------- journal
     def _append(self, record: dict) -> None:
-        line = json.dumps(record, sort_keys=True) + "\n"
-        with open(self.journal_path, "a") as f:
-            f.write(line)
-            f.flush()
-            os.fsync(f.fileno())
+        self.fs.append_durable(
+            self.journal_path, journal_line(record), site="journal.append"
+        )
 
     def begin(self, record: dict) -> int:
         """Append a write-intent record; returns its transaction id."""
@@ -288,46 +419,44 @@ class Catalog:
             self.truncate_journal()
             return
         tmp = self.journal_path + ".tmp"
-        with open(tmp, "w") as f:
-            for group in remaining:
-                for rec in group:
-                    f.write(json.dumps(rec, sort_keys=True) + "\n")
-            f.flush()
-            os.fsync(f.fileno())
-        os.replace(tmp, self.journal_path)
+        buf = "".join(
+            journal_line(rec) for group in remaining for rec in group
+        )
+        self.fs.write_durable(tmp, buf.encode("utf-8"), site="journal.rewrite")
+        self.fs.replace(tmp, self.journal_path, site="journal.replace")
 
     def truncate_journal(self) -> None:
-        with open(self.journal_path, "w") as f:
-            f.flush()
-            os.fsync(f.fileno())
+        self.fs.write_durable(self.journal_path, b"", site="journal.clear")
 
     def pending(self) -> list[list[dict]]:
         """Uncommitted transactions from the journal, oldest first.
 
         Each element is the ordered list of records sharing one ``tx`` (a
-        vacuum contributes up to two: intent + switch). A torn final line
-        (crash mid-append) is ignored: the intent never became durable, so
-        by protocol nothing after it happened.
+        vacuum contributes up to two: intent + switch). A torn tail (crash
+        mid-append) is tolerated — the damaged intent never became durable,
+        so by protocol nothing after it happened; :meth:`recover_journal`
+        additionally truncates it at open. Damage *before* a valid record
+        raises :class:`CorruptJournalError`.
         """
-        if not os.path.exists(self.journal_path):
-            return []
-        with open(self.journal_path) as f:
-            lines = f.read().splitlines()
-        groups: dict[int, list[dict]] = {}
-        committed: set[int] = set()
-        for i, line in enumerate(lines):
-            if not line.strip():
-                continue
-            try:
-                rec = json.loads(line)
-            except json.JSONDecodeError:
-                if i == len(lines) - 1:
-                    break  # torn tail — never became durable
-                raise ValueError(f"corrupt catalog journal at line {i + 1}")
-            tx = int(rec.get("tx", 0))
-            self._next_tx = max(self._next_tx, tx + 1)
-            if rec.get("op") == "commit":
-                committed.add(tx)
-            else:
-                groups.setdefault(tx, []).append(rec)
-        return [recs for tx, recs in sorted(groups.items()) if tx not in committed]
+        records, max_tx, _torn, corrupt = read_journal(self.journal_path)
+        if corrupt is not None:
+            raise CorruptJournalError(f"{self.journal_path}: {corrupt}")
+        self._next_tx = max(self._next_tx, max_tx + 1)
+        return _group_pending(records)
+
+    def recover_journal(self) -> list[list[dict]]:
+        """Open-time journal read: truncate any torn tail, return pending.
+
+        The physical truncation keeps a later reader (or a tool reading
+        the raw file) from re-classifying the same damage, and is safe by
+        protocol: a record that never fully hit disk never had durable
+        side effects. Body corruption raises :class:`CorruptJournalError`
+        — the caller must degrade to read-only, not replay.
+        """
+        records, max_tx, torn, corrupt = read_journal(self.journal_path)
+        if corrupt is not None:
+            raise CorruptJournalError(f"{self.journal_path}: {corrupt}")
+        if torn is not None:
+            self.fs.truncate(self.journal_path, torn, site="journal.repair")
+        self._next_tx = max(self._next_tx, max_tx + 1)
+        return _group_pending(records)

@@ -74,12 +74,23 @@ import numpy as np
 from .bufferpool import BufferPool
 from .catalog import (
     STATUS_COMMITTED,
+    STATUS_CORRUPT,
     STATUS_PENDING,
     Catalog,
     ModelEntry,
     maybe_fail,
 )
+from .faultfs import FaultFS
 from .hnsw import HNSWIndex
+from .integrity import (
+    CorruptIndexError,
+    CorruptJournalError,
+    CorruptMetaError,
+    CorruptPageError,
+    ReadOnlyStoreError,
+    frame_index,
+    unframe_index,
+)
 from .pages import (
     TensorPage,
     TensorRecord,
@@ -89,6 +100,8 @@ from .pages import (
     read_page_refs,
     read_record,
     remap_page_vertices,
+    salvage_page_refs,
+    verify_page,
     write_page,
 )
 from .quantize import (
@@ -165,15 +178,6 @@ class _SnapshotRelease:
         self.queue.append((self.token, self.frame))
 
 
-def _write_file_durable(path: str, data: bytes) -> None:
-    """Write + fsync: journaled operations need the file durable before the
-    record that references it becomes the commit point."""
-    with open(path, "wb") as f:
-        f.write(data)
-        f.flush()
-        os.fsync(f.fileno())
-
-
 class _IndexCache:
     """LRU cache of deserialized HNSW indexes, bounded by bytes (paper §4.1).
 
@@ -192,9 +196,10 @@ class _IndexCache:
     whole budget, which ``_evict`` alone could never reclaim.
     """
 
-    def __init__(self, root: str, budget_bytes: int):
+    def __init__(self, root: str, budget_bytes: int, fs: FaultFS | None = None):
         self.root = root
         self.budget = budget_bytes
+        self.fs = fs if fs is not None else FaultFS()
         self._live: OrderedDict[int, HNSWIndex] = OrderedDict()
         self._dirty: set[int] = set()
         self._pins: dict[int, int] = {}
@@ -216,8 +221,7 @@ class _IndexCache:
             path = self._path(dim)
             if os.path.exists(path):
                 self.misses += 1
-                with open(path, "rb") as f:
-                    idx = HNSWIndex.from_bytes(f.read())
+                idx = self._read(path)
             elif create:
                 # A fresh index is still a miss: nothing resident served it.
                 self.misses += 1
@@ -257,11 +261,28 @@ class _IndexCache:
             else:
                 self._pins.pop(dim, None)
 
+    def _read(self, path: str) -> HNSWIndex:
+        """Load an index file, verifying its frame CRC before unpickling.
+
+        A flipped bit in a pickle can deserialize into silently wrong
+        vertex codes — the worst failure mode, since every delta decodes
+        against a wrong base — so the payload is checksum-verified first
+        (:func:`~repro.core.integrity.unframe_index`); legacy unframed
+        files get their parse errors wrapped as :class:`CorruptIndexError`.
+        """
+        payload = unframe_index(self.fs.read_bytes(path, site="index.read"), path)
+        try:
+            return HNSWIndex.from_bytes(payload)
+        except Exception as exc:
+            raise CorruptIndexError(f"{path}: does not parse: {exc!r}") from exc
+
     def _write(self, dim: int, idx: HNSWIndex) -> None:
         # fsync: the save protocol commits the catalog only after vertices
         # are durable — a page must never reference a vertex the index
         # file could lose in a power cut.
-        _write_file_durable(self._path(dim), idx.to_bytes())
+        self.fs.write_durable(
+            self._path(dim), frame_index(idx.to_bytes()), site="index.write"
+        )
 
     def _evict(self) -> None:
         while len(self._live) > 1 and self.resident_bytes() > self.budget:
@@ -354,6 +375,8 @@ class StorageEngine:
         ef_search: int = 32,
         pool_bytes: int = 1 << 30,
         auto_maintenance: bool = False,
+        fs: FaultFS | None = None,
+        checksums: bool = True,
     ):
         self.root = root
         os.makedirs(os.path.join(root, "pages"), exist_ok=True)
@@ -361,11 +384,29 @@ class StorageEngine:
         self.tolerance = tolerance
         self.tau = tau
         self.ef_search = ef_search
-        self.index_cache = _IndexCache(os.path.join(root, "index"), cache_bytes)
+        # All file access routes through one FaultFS shim so tests can
+        # inject EIO / torn writes / bit flips / crash-at-fsync at any
+        # individual I/O call; checksums=False skips page CRC compute +
+        # verify (the durability benchmark's baseline mode).
+        self.fs = fs if fs is not None else FaultFS()
+        self.checksums = checksums
+        # Degraded read-only mode: set when the journal body or meta.json
+        # is corrupt — serving the last good state is safe, mutating on
+        # top of it is not.
+        self.read_only = False
+        self.degraded_reason: str | None = None
+        self._corrupt_reasons: dict[str, str] = {}
+        self._scrub_cursor = 0
+        self.index_cache = _IndexCache(
+            os.path.join(root, "index"), cache_bytes, fs=self.fs
+        )
         # Single path to page bytes: every load shares frames (and decoded
         # payloads) here instead of re-reading files per handle.
         self.page_pool = BufferPool(pool_bytes)
-        self.catalog = Catalog(root)
+        self.catalog = Catalog(root, fs=self.fs)
+        if self.catalog.meta_fallback is not None:
+            self._degrade(f"meta.json corrupt, serving last good snapshot "
+                          f"({self.catalog.meta_fallback})")
         # (dim, vid) refs held by saves between ANN match and commit: keeps
         # a concurrent delete/vacuum from tombstoning a base an in-flight
         # page is about to reference.
@@ -393,6 +434,18 @@ class StorageEngine:
         """Legacy read-only view of the catalog (pre-catalog dict format)."""
         return self.catalog.snapshot_dict()
 
+    def _degrade(self, reason: str) -> None:
+        """Enter read-only mode: loads keep serving, writes fail typed."""
+        self.read_only = True
+        if self.degraded_reason is None:
+            self.degraded_reason = reason
+
+    def _check_writable(self) -> None:
+        if self.read_only:
+            raise ReadOnlyStoreError(
+                f"store is read-only: {self.degraded_reason}"
+            )
+
     def _page_file(self, page_name: str) -> str:
         return os.path.join(self.root, "pages", page_name)
 
@@ -401,23 +454,42 @@ class StorageEngine:
 
     def _unlink(self, path: str) -> None:
         try:
-            os.unlink(path)
+            self.fs.unlink(path, site="unlink")
         except FileNotFoundError:
             pass
 
-    def _page_refs(self, page_name: str) -> Counter:
+    def _page_refs(self, page_name: str, strict: bool = False) -> Counter:
         """(dim, vertex_id) → count of records in a page (empty if missing).
 
         Header-only scan (``read_page_refs``): lifecycle ops run this under
-        the engine lock, so it must not read whole page payloads.
+        the engine lock, so it must not read whole page payloads. On a
+        damaged page (unless ``strict``) it falls back to salvaging refs
+        from records whose CRCs still verify — under-counting only *leaks*
+        references (fsck rebuilds them); it never frees a base a surviving
+        record depends on.
         """
         path = self._page_file(page_name)
         refs: Counter = Counter()
         if not os.path.exists(path):
             return refs
-        with open(path, "rb") as f:
-            for dim, vid in read_page_refs(f):
+        try:
+            with self.fs.open(path, "rb", site="page.refs") as f:
+                for dim, vid in read_page_refs(f):
+                    refs[(dim, vid)] += 1
+        except CorruptPageError:
+            if strict:
+                raise
+            refs = Counter()
+            try:
+                buf = self.fs.read_bytes(path, site="page.refs")
+            except OSError:
+                return refs
+            for dim, vid in salvage_page_refs(buf):
                 refs[(dim, vid)] += 1
+        except OSError:
+            if strict:
+                raise
+            return Counter()
         return refs
 
     def _check_quarantine(self, dim: int) -> None:
@@ -437,7 +509,12 @@ class StorageEngine:
             ):
                 by_dim.setdefault(dim, []).append(vid)
         for dim, vids in by_dim.items():
-            idx = self.index_cache.get(dim)
+            try:
+                idx = self.index_cache.get(dim)
+            except CorruptIndexError:
+                # Nothing sound to tombstone in a corrupt index; fsck
+                # removes/rebuilds the file once nothing references it.
+                continue
             if idx is None:
                 continue
             changed = False
@@ -453,8 +530,21 @@ class StorageEngine:
     # --------------------------------------------------------------- recovery
     def _recover(self) -> None:
         """Replay the catalog journal: roll interrupted operations forward
-        (catalog snapshot already switched) or back (snapshot untouched)."""
-        pending = self.catalog.pending()
+        (catalog snapshot already switched) or back (snapshot untouched).
+
+        Skipped entirely in degraded mode: replaying intents against a
+        fallback (possibly stale) snapshot could roll back transactions
+        that actually committed — read-only means *no* disk mutation.
+        A corrupt journal body (damage before a valid record) likewise
+        degrades instead of replaying guesses.
+        """
+        if self.read_only:
+            return
+        try:
+            pending = self.catalog.recover_journal()
+        except CorruptJournalError as exc:
+            self._degrade(f"journal corrupt, replay skipped ({exc})")
+            return
         dirty = self._drop_pending_entries()
         for group in pending:
             head = group[0]
@@ -503,7 +593,10 @@ class StorageEngine:
         changed = False
         for name in list(self.catalog.state.models):
             entry = self.catalog.state.models[name]
-            if entry.status == STATUS_COMMITTED:
+            if entry.status != STATUS_PENDING:
+                # Committed entries are fine; quarantined (corrupt) entries
+                # must survive reopen so the damage stays visible until
+                # repaired or explicitly dropped.
                 continue
             refs = self._page_refs(entry.page)
             del self.catalog.state.models[name]
@@ -590,7 +683,8 @@ class StorageEngine:
         self.index_cache.drop(dim)
         vac = self.index_cache._path(dim) + ".vac"
         if os.path.exists(vac):
-            os.replace(vac, self.index_cache._path(dim))
+            self.fs.replace(vac, self.index_cache._path(dim),
+                            site="index.replace")
         for name, old_page, new_page in switch.get("moves", []):
             entry = self.catalog.get(name)
             if entry is not None and entry.page == old_page:
@@ -600,7 +694,8 @@ class StorageEngine:
             # Legacy in-place protocol: swap the same-name side files in.
             pvac = self._page_file(page_name) + ".vac"
             if os.path.exists(pvac):
-                os.replace(pvac, self._page_file(page_name))
+                self.fs.replace(pvac, self._page_file(page_name),
+                                site="page.replace")
         self.catalog.set_dim_refs(
             dim, {int(v): int(c) for v, c in switch.get("refs", {}).items()}
         )
@@ -726,6 +821,7 @@ class StorageEngine:
         dropped, all under one journal transaction.
         """
         t0 = time.perf_counter()
+        self._check_writable()
         self._drain_released()
         p = self.tolerance if tolerance is None else tolerance
         tau_ = self.tau if tau is None else tau
@@ -805,7 +901,7 @@ class StorageEngine:
                 )
                 rec.payload = encode_payload(rec)
                 records.append(rec)
-            page = write_page(records)
+            page = write_page(records, checksums=self.checksums)
 
             # Phase 3 (locked): the journaled commit. Intent → index flush
             # (vertices durable before the page references them) → page
@@ -833,7 +929,9 @@ class StorageEngine:
                 maybe_fail("save.after_intent")
                 self.index_cache.flush()
                 maybe_fail("save.after_index_flush")
-                _write_file_durable(self._page_file(page_name), page)
+                self.fs.write_durable(
+                    self._page_file(page_name), page, site="page.write"
+                )
                 maybe_fail("save.after_page_write")
                 entry = ModelEntry(
                     model_id=model_id,
@@ -908,6 +1006,7 @@ class StorageEngine:
         batch wall time amortized evenly over the ``seconds`` fields.
         """
         t0 = time.perf_counter()
+        self._check_writable()
         p = self.tolerance if tolerance is None else tolerance
         tau_ = self.tau if tau is None else tau
         specs = [(str(n), a, t) for n, a, t in models]
@@ -995,7 +1094,7 @@ class StorageEngine:
                     )
                     rec.payload = encode_payload(rec)
                     records.append(rec)
-                pages.append(write_page(records))
+                pages.append(write_page(records, checksums=self.checksums))
                 nbits_per_model.append(nbits)
 
             # Phase 3 (locked): ONE journaled commit for the whole batch.
@@ -1029,8 +1128,9 @@ class StorageEngine:
                 self.index_cache.flush()
                 maybe_fail("save_batch.after_index_flush")
                 for mi in range(len(specs)):
-                    _write_file_durable(
-                        self._page_file(page_names[mi]), pages[mi]
+                    self.fs.write_durable(
+                        self._page_file(page_names[mi]), pages[mi],
+                        site="page.write",
                     )
                 maybe_fail("save_batch.after_page_write")
                 for mi, (name, arch, _t) in enumerate(specs):
@@ -1088,11 +1188,18 @@ class StorageEngine:
     # -------------------------------------------------------------- lifecycle
     def delete_model(self, name: str) -> None:
         """Drop a model: journal intent → catalog commit → tombstone
-        zero-ref vertices → unlink page. Crash-safe at every step."""
+        zero-ref vertices → unlink page. Crash-safe at every step.
+
+        Quarantined (corrupt) models can be deleted too — that is the
+        repair path for unrecoverable damage; their reference counts come
+        from whatever records still verify (see :meth:`_page_refs`)."""
+        self._check_writable()
         self._drain_released()
         with self._lock:
             entry = self.catalog.get(name)
-            if entry is None or entry.status != STATUS_COMMITTED:
+            if entry is None or entry.status not in (
+                STATUS_COMMITTED, STATUS_CORRUPT
+            ):
                 raise KeyError(name)
             refs = self._page_refs(entry.page)
             for dim, _vid in refs:
@@ -1115,6 +1222,7 @@ class StorageEngine:
             maybe_fail("delete.after_index_flush")
             self._unlink(self._page_file(entry.page))
             self.page_pool.invalidate(entry.page)
+            self._corrupt_reasons.pop(name, None)
             self.catalog.commit_tx(tx)
 
     def replace_model(
@@ -1158,6 +1266,7 @@ class StorageEngine:
         Returns a report: per-dim dropped/live counts, pages rewritten,
         and dims skipped because an in-flight save holds references.
         """
+        self._check_writable()
         self._drain_released()
         report: dict = {
             "dims": {},
@@ -1166,6 +1275,17 @@ class StorageEngine:
             "pages_rewritten": 0,
         }
         with self._lock:
+            corrupt = self.catalog.corrupt_names()
+            if corrupt:
+                # Compaction renumbers vertex ids and rewrites page refs;
+                # a quarantined page cannot be remapped, so a vacuum now
+                # would strand it pointing at pre-compaction ids forever.
+                # Repair or drop the quarantined models first.
+                report["skipped_reason"] = (
+                    f"{len(corrupt)} quarantined model(s) pin vertex ids: "
+                    f"{sorted(corrupt)}"
+                )
+                return report
             # Lazy, one scan per page for the whole vacuum: which dims each
             # page references never changes (rewrites only renumber
             # vertices, renames are tracked below). Built only when some
@@ -1175,12 +1295,26 @@ class StorageEngine:
             dims_by_page_cache: list[dict[str, set[int]]] = []
 
             def dims_by_page() -> dict[str, set[int]]:
+                # STRICT scan: a page this planner cannot read must abort
+                # the vacuum. Treating it as reference-free would skip its
+                # remap during renumbering and strand live records on
+                # stale vertex ids — the unsafe direction.
                 if not dims_by_page_cache:
-                    dims_by_page_cache.append({
-                        entry.page: {d for d, _ in self._page_refs(entry.page)}
-                        for entry in (self.catalog.get(n)
-                                      for n in self.catalog.names())
-                    })
+                    by_page: dict[str, set[int]] = {}
+                    for entry in (self.catalog.get(n)
+                                  for n in self.catalog.names()):
+                        try:
+                            by_page[entry.page] = {
+                                d for d, _ in self._page_refs(
+                                    entry.page, strict=True)
+                            }
+                        except CorruptPageError as exc:
+                            self._quarantine_model(
+                                entry.name, entry.page,
+                                f"vacuum scan: {exc}", persist=False,
+                            )
+                            raise
+                    dims_by_page_cache.append(by_page)
                 return dims_by_page_cache[0]
 
             for dim in (dims if dims is not None else self.index_cache.dims()):
@@ -1249,13 +1383,27 @@ class StorageEngine:
         # and numbering, so concurrent readers stay lock-free and valid.
         new_idx = idx.clone()
         remap = new_idx.compact()
-        _write_file_durable(
-            self.index_cache._path(dim) + ".vac", new_idx.to_bytes()
+        self.fs.write_durable(
+            self.index_cache._path(dim) + ".vac",
+            frame_index(new_idx.to_bytes()),
+            site="index.vac",
         )
         moves: list[tuple[ModelEntry, str, str]] = []
         for entry in affected:
-            with open(self._page_file(entry.page), "rb") as f:
-                buf = f.read()
+            buf = self.fs.read_bytes(
+                self._page_file(entry.page), site="page.vacuum"
+            )
+            if self.checksums:
+                try:
+                    verify_page(buf)
+                except CorruptPageError as exc:
+                    # Never remap a damaged page: quarantine the model and
+                    # abort this dim (rolled back at the next reopen).
+                    self._quarantine_model(
+                        entry.name, entry.page, f"vacuum: {exc}",
+                        persist=False,
+                    )
+                    raise
             new_buf, changed = remap_page_vertices(buf, remap, dim)
             if changed:
                 # Generation ids come from the catalog's monotonic counter,
@@ -1269,7 +1417,9 @@ class StorageEngine:
                         f"model_{entry.model_id}"
                         f".g{self.catalog.allocate_id()}.page"
                     )
-                _write_file_durable(self._page_file(new_page), new_buf)
+                self.fs.write_durable(
+                    self._page_file(new_page), new_buf, site="page.write"
+                )
                 moves.append((entry, entry.page, new_page))
         maybe_fail("vacuum.after_sidefiles")
         new_refs = {str(remap[v]): c for v, c in refs.items() if c > 0}
@@ -1290,7 +1440,8 @@ class StorageEngine:
         self.catalog.set_dim_refs(dim, {int(v): c for v, c in new_refs.items()})
         self.catalog.save_snapshot()  # ← commit point
         maybe_fail("vacuum.mid_switch")
-        os.replace(self.index_cache._path(dim) + ".vac", self.index_cache._path(dim))
+        self.fs.replace(self.index_cache._path(dim) + ".vac",
+                        self.index_cache._path(dim), site="index.replace")
         for _entry, old_page, _new_page in moves:
             self._unlink(self._page_file(old_page))
             self.page_pool.invalidate(old_page)
@@ -1307,8 +1458,48 @@ class StorageEngine:
 
     # ------------------------------------------------------------------ load
     def _read_page_bytes(self, page_name: str) -> bytes:
-        with open(self._page_file(page_name), "rb") as f:
-            return f.read()
+        """Read + verify page bytes — the buffer pool's frame loader.
+
+        Verification happens here, at frame *admission*: every reader of a
+        cached frame shares one CRC pass instead of re-verifying per load.
+        """
+        data = self.fs.read_bytes(self._page_file(page_name), site="page.read")
+        if self.checksums:
+            verify_page(data)
+        return data
+
+    def _quarantine_model(
+        self, name: str, page_name: str, reason: str, persist: bool = True
+    ) -> bool:
+        """Mark a model corrupt; the store keeps serving healthy models.
+
+        Re-validates that the entry still points at ``page_name`` — a
+        racing replace/vacuum may have swapped the page, in which case the
+        damage belongs to a dead file, not the live model. The quarantine
+        is persisted through a catalog snapshot unless the store is
+        read-only (degraded mode never mutates disk).
+        """
+        with self._lock:
+            entry = self.catalog.get(name)
+            if (
+                entry is None
+                or entry.page != page_name
+                or entry.status == STATUS_CORRUPT
+            ):
+                return False
+            entry.status = STATUS_CORRUPT
+            self._corrupt_reasons[name] = reason
+            self.page_pool.invalidate(page_name)
+            if persist and not self.read_only:
+                try:
+                    self.catalog.save_snapshot()
+                except OSError:
+                    pass  # quarantine still holds in memory; next commit persists
+            return True
+
+    def _corrupt_error(self, name: str) -> CorruptPageError:
+        reason = self._corrupt_reasons.get(name, "failed an integrity check")
+        return CorruptPageError(f"model {name!r} is quarantined: {reason}")
 
     def _parse_frame(self, frame) -> TensorPage:
         """Parsed-header cache on the frame (shared across handles)."""
@@ -1337,13 +1528,22 @@ class StorageEngine:
         with self._lock:
             entry = self.catalog.get(name)
             if entry is None or entry.status != STATUS_COMMITTED:
+                if entry is not None and entry.status == STATUS_CORRUPT:
+                    raise self._corrupt_error(name)
                 raise KeyError(name)
             page_name = entry.page
-        frame = self.page_pool.get(
-            page_name, lambda: self._read_page_bytes(page_name)
-        )
+        try:
+            frame = self.page_pool.get(
+                page_name, lambda: self._read_page_bytes(page_name)
+            )
+        except CorruptPageError as exc:
+            self._quarantine_model(name, page_name, str(exc))
+            raise
         try:
             page = self._parse_frame(frame)
+        except CorruptPageError as exc:
+            self._quarantine_model(name, page_name, str(exc))
+            raise
         finally:
             self.page_pool.unpin(frame)
         return page, entry
@@ -1368,6 +1568,8 @@ class StorageEngine:
             with self._lock:
                 entry = self.catalog.get(name)
                 if entry is None or entry.status != STATUS_COMMITTED:
+                    if entry is not None and entry.status == STATUS_CORRUPT:
+                        raise self._corrupt_error(name)
                     raise KeyError(name)
                 page_name = entry.page
             # Page bytes + header parse + payload slicing run outside the
@@ -1384,13 +1586,30 @@ class StorageEngine:
                 else:
                     page = read_page_header(self._read_page_bytes(page_name))
                 dims = page_dim_keys(page)
-            except FileNotFoundError:
+            except FileNotFoundError as exc:
                 # Raced a delete/replace/vacuum: re-read the entry. A frame
                 # returned by get() cannot be the raiser (its bytes loaded),
                 # but unpin defensively in case the parse path ever throws.
                 if frame is not None:
                     self.page_pool.unpin(frame)
+                if self.read_only:
+                    # No writers exist in a degraded store: the fallback
+                    # snapshot predates this page's cleanup and the file
+                    # is permanently gone — fail typed, don't spin.
+                    self._quarantine_model(
+                        name, page_name, f"page file missing: {exc}"
+                    )
+                    raise self._corrupt_error(name) from exc
                 continue
+            except CorruptPageError as exc:
+                # Contain the damage: quarantine THIS model (the catalog
+                # keeps serving every healthy one) and fail typed. Plain
+                # I/O errors (EIO) do NOT quarantine — the disk said
+                # nothing about the bytes, only about this read.
+                if frame is not None:
+                    self.page_pool.unpin(frame)
+                self._quarantine_model(name, page_name, str(exc))
+                raise
             except BaseException:
                 if frame is not None:
                     self.page_pool.unpin(frame)  # corrupt page: no pin leak
@@ -1398,6 +1617,8 @@ class StorageEngine:
             try:
                 with self._lock:
                     cur = self.catalog.get(name)
+                    if cur is not None and cur.status == STATUS_CORRUPT:
+                        raise self._corrupt_error(name)
                     if (cur is None or cur.status != STATUS_COMMITTED
                             or cur.page != page_name):
                         raise _Retry
@@ -1425,6 +1646,14 @@ class StorageEngine:
                 if frame is not None:
                     self.page_pool.unpin(frame)
                 continue
+            except CorruptIndexError as exc:
+                # The page is fine but a referenced index file is not:
+                # this model cannot materialize, so quarantine it (other
+                # dims' models keep serving).
+                if frame is not None:
+                    self.page_pool.unpin(frame)
+                self._quarantine_model(name, page_name, str(exc))
+                raise
             except BaseException:
                 if frame is not None:
                     self.page_pool.unpin(frame)
@@ -1449,6 +1678,151 @@ class StorageEngine:
         each base shared *across* handles de-quantized once.
         """
         return [self.load_model(name, bits=bits) for name in names]
+
+    # ------------------------------------------------------------- integrity
+    def scrub(self, max_models: int = 1) -> dict:
+        """Incremental integrity scrub: verify up to ``max_models`` pages.
+
+        A round-robin cursor walks the committed models so repeated calls
+        (one per maintenance-daemon step) cover the whole store, finding
+        latent disk corruption and quarantining it *before* a reader trips
+        on it. Only page bytes are read — no payload decode, no lock held
+        during I/O.
+        """
+        report: dict = {"scanned": 0, "corrupt": [], "io_errors": 0}
+        for _ in range(max(0, int(max_models))):
+            with self._lock:
+                names = self.catalog.names()
+                if not names:
+                    break
+                self._scrub_cursor %= len(names)
+                name = names[self._scrub_cursor]
+                self._scrub_cursor += 1
+                page_name = self.catalog.get(name).page
+            try:
+                verify_page(self.fs.read_bytes(
+                    self._page_file(page_name), site="page.scrub"
+                ))
+            except FileNotFoundError:
+                continue  # raced a delete/replace/vacuum
+            except CorruptPageError as exc:
+                if self._quarantine_model(name, page_name, f"scrub: {exc}"):
+                    report["corrupt"].append(name)
+            except OSError:
+                report["io_errors"] += 1
+            report["scanned"] += 1
+        return report
+
+    def verify_store(self, quarantine: bool = False) -> dict:
+        """Full integrity sweep over every page and index file.
+
+        With ``quarantine=True`` (the repair path — ``tools/fsck.py``),
+        models whose page fails verification, whose page file is missing,
+        or whose referenced index file is corrupt are marked corrupt in
+        the catalog (one snapshot at the end persists them all).
+        """
+        report: dict = {"pages": {}, "indexes": {}, "quarantined": []}
+        bad_dims: set[int] = set()
+        for dim in self.index_cache.dims():
+            path = self.index_cache._path(dim)
+            if not os.path.exists(path):
+                continue  # resident-only index: consistent by construction
+            try:
+                payload = unframe_index(
+                    self.fs.read_bytes(path, site="index.scrub"), path
+                )
+                HNSWIndex.from_bytes(payload)
+                report["indexes"][dim] = "ok"
+            except Exception as exc:
+                report["indexes"][dim] = f"corrupt: {exc}"
+                bad_dims.add(dim)
+        with self._lock:
+            names = self.catalog.names(committed_only=False)
+        changed = False
+        for name in names:
+            with self._lock:
+                entry = self.catalog.get(name)
+                if entry is None:
+                    continue
+                if entry.status == STATUS_CORRUPT:
+                    report["pages"][name] = "quarantined"
+                    continue
+                page_name = entry.page
+            status = "ok"
+            reason = None
+            try:
+                page = verify_page(self.fs.read_bytes(
+                    self._page_file(page_name), site="page.scrub"
+                ))
+                broken = sorted(set(page_dim_keys(page)) & bad_dims)
+                if broken:
+                    reason = f"references corrupt index dim(s) {broken}"
+                    status = f"corrupt: {reason}"
+            except FileNotFoundError:
+                reason = "page file missing"
+                status = f"corrupt: {reason}"
+            except CorruptPageError as exc:
+                reason = str(exc)
+                status = f"corrupt: {reason}"
+            if reason is not None and quarantine:
+                if self._quarantine_model(
+                    name, page_name, reason, persist=False
+                ):
+                    report["quarantined"].append(name)
+                    changed = True
+            report["pages"][name] = status
+        if changed and not self.read_only:
+            with self._lock:
+                self.catalog.save_snapshot()
+        return report
+
+    def drop_corrupt_models(self) -> list[str]:
+        """Delete every quarantined model (the destructive half of repair)."""
+        self._check_writable()
+        dropped = []
+        with self._lock:
+            for name in self.catalog.corrupt_names():
+                self.delete_model(name)
+                dropped.append(name)
+        return dropped
+
+    def rebuild_vertex_refs(self) -> dict:
+        """Re-derive ``vertex_refs`` wholesale from committed pages.
+
+        The repair path for leaked references (quarantine accounting is
+        deliberately conservative — see :meth:`_page_refs`). Requires no
+        quarantined models: their unreadable records hold references this
+        rebuild cannot see, and dropping those would free live bases.
+        Newly unreferenced vertices are tombstoned for a later vacuum.
+        """
+        self._check_writable()
+        with self._lock:
+            if self.catalog.corrupt_names():
+                raise RuntimeError(
+                    "cannot rebuild refs while quarantined models exist — "
+                    "repair or drop them first"
+                )
+            derived: Counter = Counter()
+            for n in self.catalog.names():
+                derived.update(
+                    self._page_refs(self.catalog.get(n).page, strict=True)
+                )
+            old_keys = set(self.catalog.state.vertex_refs)
+            self.catalog.state.vertex_refs = {
+                f"{d}:{v}": int(c) for (d, v), c in derived.items()
+            }
+            pairs = {
+                tuple(int(x) for x in k.split(":")) for k in old_keys
+            } | set(derived)
+            self._tombstone_unreferenced(pairs)
+            self.index_cache.flush()
+            self.catalog.save_snapshot()
+            return {
+                "refs": len(derived),
+                "dropped": len(
+                    old_keys - set(self.catalog.state.vertex_refs)
+                ),
+            }
 
     # ----------------------------------------------------------- maintenance
     def start_maintenance(self, **kwargs):
@@ -1495,6 +1869,12 @@ class StorageEngine:
                 },
                 "buffer_pool": self.page_pool.stats(),
                 "index_cache": self.index_cache.stats(),
+                "integrity": {
+                    "read_only": self.read_only,
+                    "degraded_reason": self.degraded_reason,
+                    "checksums": self.checksums,
+                    "corrupt_models": sorted(self.catalog.corrupt_names()),
+                },
             }
             if self.maintenance is not None:
                 out["maintenance"] = self.maintenance.stats()

@@ -44,6 +44,7 @@ from collections import Counter
 
 import numpy as np
 
+from .integrity import CorruptPageError
 from .pages import TensorPage, TensorRecord, decode_payload, read_record, read_record_partial
 from .quantize import dequantize_delta, dequantize_linear
 
@@ -152,6 +153,14 @@ class LoadedModel:
         handle over the same page version through the frame cache."""
         if rec.qdelta is not None:
             return rec
+        # Defense in depth for unverified paths (legacy v2 pages, engines
+        # opened with checksums=False): a payload shorter than its metadata
+        # claims must fail typed, never decode into silently wrong codes.
+        if len(rec.payload) < rec.payload_nbytes:
+            raise CorruptPageError(
+                f"tensor {rec.name!r}: truncated payload "
+                f"({len(rec.payload)} of {rec.payload_nbytes} bytes)"
+            )
         frame = self.snapshot.frame if self.snapshot is not None else None
         if frame is None:
             rec.qdelta = decode_payload(rec)

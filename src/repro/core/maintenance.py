@@ -17,11 +17,21 @@ Each :meth:`MaintenanceDaemon.step` does exactly:
    watermark, evict unpinned frames back down to it.
 3. **index-cache trim** — the existing commit-boundary budget enforcement,
    run off the write path too so a read-only workload also converges.
+4. **one scrub increment** — ``engine.scrub(scrub_models)`` verifies the
+   next committed page's checksums (round-robin), so latent disk
+   corruption is quarantined before a reader trips on it.
 
 Tests drive ``step()`` synchronously for determinism; ``start()`` spawns
-the daemon thread that calls it every ``interval_s`` seconds (errors are
-counted and remembered, never raised into the thread — a failing
-maintenance pass must not kill the daemon).
+the daemon thread that calls it every ``interval_s`` seconds.
+
+Failure containment (the daemon must never die silently): a step that
+raises is counted and remembered (``errors`` / ``last_error``), and the
+loop backs off exponentially (capped at ``max_backoff_s``) while errors
+persist, resetting to ``interval_s`` on the first success. If the loop
+body itself somehow escapes — a ``BaseException``, an error in the backoff
+logic — a supervisor wrapper records it, increments ``restarts``, and
+restarts the loop rather than leaving a dead thread that looks alive from
+``stats()``.
 """
 
 from __future__ import annotations
@@ -40,11 +50,15 @@ class MaintenanceDaemon:
         dead_fraction: float = 0.25,
         interval_s: float = 1.0,
         pool_high_watermark: float = 0.9,
+        scrub_models: int = 1,
+        max_backoff_s: float = 30.0,
     ):
         self.engine = engine
         self.dead_fraction = float(dead_fraction)
         self.interval_s = float(interval_s)
         self.pool_high_watermark = float(pool_high_watermark)
+        self.scrub_models = int(scrub_models)
+        self.max_backoff_s = float(max_backoff_s)
         self._cursor = 0
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
@@ -53,8 +67,12 @@ class MaintenanceDaemon:
         self.vacuumed_vertices = 0
         self.pages_rewritten = 0
         self.pool_bytes_trimmed = 0
+        self.pages_scrubbed = 0
+        self.corrupt_found = 0
         self.errors = 0
         self.last_error: str | None = None
+        self.restarts = 0
+        self.consecutive_errors = 0
 
     # ------------------------------------------------------------- stepping
     def step(self) -> dict:
@@ -65,11 +83,15 @@ class MaintenanceDaemon:
                 "vertices_dropped": 0,
                 "pages_rewritten": 0,
                 "pool_bytes_trimmed": 0,
+                "pages_scrubbed": 0,
+                "scrub_corrupt": [],
             }
             engine = self.engine
             engine._drain_released()
             dims = engine.index_cache.dims()
-            if dims:
+            # A degraded (read-only) store never mutates disk: vacuum is
+            # skipped, but scrubbing and cache trims still run.
+            if dims and not engine.read_only:
                 self._cursor %= len(dims)
                 dim = dims[self._cursor]
                 self._cursor += 1
@@ -81,6 +103,12 @@ class MaintenanceDaemon:
                 report["pages_rewritten"] = rep["pages_rewritten"]
                 self.vacuumed_vertices += rep["vertices_dropped"]
                 self.pages_rewritten += rep["pages_rewritten"]
+            if self.scrub_models > 0:
+                srep = engine.scrub(self.scrub_models)
+                report["pages_scrubbed"] = srep["scanned"]
+                report["scrub_corrupt"] = srep["corrupt"]
+                self.pages_scrubbed += srep["scanned"]
+                self.corrupt_found += len(srep["corrupt"])
             pool = engine.page_pool
             target = int(pool.budget * self.pool_high_watermark)
             if pool.resident_bytes() > target:
@@ -97,7 +125,7 @@ class MaintenanceDaemon:
             return
         self._stop.clear()
         self._thread = threading.Thread(
-            target=self._run, name="neurstore-maintenance", daemon=True
+            target=self._supervise, name="neurstore-maintenance", daemon=True
         )
         self._thread.start()
 
@@ -113,13 +141,39 @@ class MaintenanceDaemon:
         t = self._thread
         return t is not None and t.is_alive()
 
+    def _backoff_s(self) -> float:
+        """Current sleep: interval_s doubled per consecutive error, capped."""
+        if self.consecutive_errors == 0:
+            return self.interval_s
+        return min(
+            self.interval_s * (2.0 ** self.consecutive_errors),
+            self.max_backoff_s,
+        )
+
     def _run(self) -> None:
-        while not self._stop.wait(self.interval_s):
+        while not self._stop.wait(self._backoff_s()):
             try:
                 self.step()
+                self.consecutive_errors = 0
             except Exception as exc:  # counted, never fatal to the daemon
                 self.errors += 1
+                self.consecutive_errors += 1
                 self.last_error = repr(exc)
+
+    def _supervise(self) -> None:
+        """Restart ``_run`` if it ever escapes — a maintenance thread that
+        died silently would look alive from ``stats()`` forever."""
+        while not self._stop.is_set():
+            try:
+                self._run()
+            except BaseException as exc:
+                self.errors += 1
+                self.consecutive_errors += 1
+                self.last_error = repr(exc)
+                if self._stop.is_set():
+                    return
+                self.restarts += 1
+                self._stop.wait(self._backoff_s())
 
     # ---------------------------------------------------------------- stats
     def stats(self) -> dict:
@@ -129,6 +183,11 @@ class MaintenanceDaemon:
             "vacuumed_vertices": self.vacuumed_vertices,
             "pages_rewritten": self.pages_rewritten,
             "pool_bytes_trimmed": self.pool_bytes_trimmed,
+            "pages_scrubbed": self.pages_scrubbed,
+            "corrupt_found": self.corrupt_found,
             "errors": self.errors,
             "last_error": self.last_error,
+            "restarts": self.restarts,
+            "consecutive_errors": self.consecutive_errors,
+            "backoff_s": self._backoff_s(),
         }

@@ -14,6 +14,14 @@ the storage-level realization of paper §4.3.1.
 
 Pages are read-only once written (paper §5) and addressed by ``bytes`` /
 ``memoryview`` slicing, the library analogue of the paper's ``mmap``.
+
+Format v3 (this layer) adds integrity framing: each offset-table entry
+carries a CRC32 of its record bytes, and the header + table are sealed by
+a table CRC, so a single flipped bit or torn write anywhere in the page is
+detected (:func:`verify_page`) instead of decoding into silently wrong
+deltas. v2 pages (pre-integrity stores) still read; parse damage raises
+:class:`~repro.core.integrity.CorruptPageError`, never a bare
+``ValueError``/``struct.error``.
 """
 
 from __future__ import annotations
@@ -24,18 +32,23 @@ import struct
 import numpy as np
 
 from .bitpack import pack_bits_planar, planar_plane_bytes, unpack_bits_planar
+from .integrity import CorruptPageError, crc32
 from .quantize import QuantMeta
 
 __all__ = [
     "TensorRecord", "TensorPage", "write_page", "read_page_header",
-    "read_record", "read_record_partial", "encode_payload", "decode_payload",
-    "read_page_refs", "remap_page_vertices", "page_dim_keys",
+    "verify_page", "read_record", "read_record_partial", "encode_payload",
+    "decode_payload", "read_page_refs", "salvage_page_refs",
+    "remap_page_vertices", "page_dim_keys",
 ]
 
 _MAGIC = b"NSPG"
-_VERSION = 2
+_VERSION = 3
+_LEGACY_VERSION = 2
 _HDR = struct.Struct("<4sHI")           # magic, version, n_records
-_OFFSET = struct.Struct("<QQ")          # offset, length per record
+_OFFSET = struct.Struct("<QQ")          # v2: offset, length per record
+_OFFSET3 = struct.Struct("<QQI")        # v3: offset, length, record crc32
+_TABLE_CRC = struct.Struct("<I")        # v3: crc32 over header + table
 _REC_FIXED = struct.Struct("<HBqQqdqBd")  # name_len, ndim, vertex, dim_key, numel, scale, zp, nbit, mid
 
 
@@ -98,11 +111,14 @@ def _decode_record(
     bits: int | None = None,
     decode: bool = True,
 ) -> TensorRecord:
-    (name_len, ndim, vertex, dim_key, numel, scale, zp, nbit, mid) = _REC_FIXED.unpack_from(buf, 0)
-    off = _REC_FIXED.size
-    name = bytes(buf[off:off + name_len]).decode("utf-8")
-    off += name_len
-    shape = struct.unpack_from(f"<{ndim}I", buf, off)
+    try:
+        (name_len, ndim, vertex, dim_key, numel, scale, zp, nbit, mid) = _REC_FIXED.unpack_from(buf, 0)
+        off = _REC_FIXED.size
+        name = bytes(buf[off:off + name_len]).decode("utf-8")
+        off += name_len
+        shape = struct.unpack_from(f"<{ndim}I", buf, off)
+    except (struct.error, UnicodeDecodeError) as exc:
+        raise CorruptPageError(f"truncated tensor record: {exc}") from exc
     off += 4 * ndim
     meta = QuantMeta(scale=scale, zero_point=zp, nbit=nbit, mid=mid)
     rec = TensorRecord(name=name, shape=tuple(shape), dim_key=dim_key,
@@ -111,6 +127,11 @@ def _decode_record(
         plane = planar_plane_bytes(numel)
         b = nbit if bits is None else min(bits, nbit)
         rec.payload = bytes(buf[off:off + b * plane])
+        if len(rec.payload) < b * plane:
+            raise CorruptPageError(
+                f"record {name!r}: truncated payload "
+                f"({len(rec.payload)} of {b * plane} bytes)"
+            )
         if b < nbit:
             # MSB-truncated read: widen scale, shift zero point (Alg. 2 l.6-8).
             # The stored payload holds exactly the top b planes, so the
@@ -128,45 +149,101 @@ def _decode_record(
 
 @dataclasses.dataclass
 class TensorPage:
-    """A parsed page: header offsets plus raw buffer for lazy record reads."""
+    """A parsed page: header offsets plus raw buffer for lazy record reads.
+
+    ``crcs`` is the per-record CRC32 list for v3 pages (``None`` for legacy
+    v2 pages; a stored CRC of 0 means "not checksummed at write time").
+    """
 
     buf: bytes
     offsets: list[tuple[int, int]]
+    crcs: list[int] | None = None
+    version: int = _VERSION
 
     @property
     def n_records(self) -> int:
         return len(self.offsets)
 
 
-def write_page(records: list[TensorRecord]) -> bytes:
-    """Serialize records into one read-only tensor page."""
+def write_page(records: list[TensorRecord], checksums: bool = True) -> bytes:
+    """Serialize records into one read-only v3 tensor page.
+
+    With ``checksums=False`` record CRCs are stored as 0 (skipped on
+    verify) — the durability benchmark uses this to isolate CRC cost; the
+    table CRC sealing the header is always written (it is one pass over a
+    few hundred bytes and torn-header detection depends on it).
+    """
     blobs = [_encode_record(r) for r in records]
     header = _HDR.pack(_MAGIC, _VERSION, len(blobs))
-    table_size = _OFFSET.size * len(blobs)
-    base = len(header) + table_size
+    base = len(header) + _OFFSET3.size * len(blobs) + _TABLE_CRC.size
     out = bytearray(header)
     off = base
     for b in blobs:
-        out += _OFFSET.pack(off, len(b))
+        out += _OFFSET3.pack(off, len(b), crc32(b) if checksums else 0)
         off += len(b)
+    out += _TABLE_CRC.pack(crc32(out))
     for b in blobs:
         out += b
     return bytes(out)
 
 
 def read_page_header(buf: bytes) -> TensorPage:
-    magic, version, n = _HDR.unpack_from(buf, 0)
+    """Parse a page header, verifying framing and bounds.
+
+    Detects torn pages (offset table or records extending past the buffer)
+    and, for v3, any damage to the header/offset table via the table CRC.
+    Record payload damage is only caught by :func:`verify_page` (per-record
+    CRC pass) — header parsing stays O(records)."""
+    try:
+        magic, version, n = _HDR.unpack_from(buf, 0)
+    except struct.error as exc:
+        raise CorruptPageError("truncated page header") from exc
     if magic != _MAGIC:
-        raise ValueError("not a NeurStore tensor page")
-    if version != _VERSION:
-        raise ValueError(f"unsupported tensor page version {version}")
-    offsets = []
-    pos = _HDR.size
-    for _ in range(n):
-        o, l = _OFFSET.unpack_from(buf, pos)
-        offsets.append((o, l))
-        pos += _OFFSET.size
-    return TensorPage(buf=buf, offsets=offsets)
+        raise CorruptPageError("not a NeurStore tensor page")
+    offsets: list[tuple[int, int]] = []
+    crcs: list[int] | None = None
+    if version == _LEGACY_VERSION:
+        table_end = _HDR.size + _OFFSET.size * n
+        if len(buf) < table_end:
+            raise CorruptPageError("torn page: offset table truncated")
+        for i in range(n):
+            o, l = _OFFSET.unpack_from(buf, _HDR.size + i * _OFFSET.size)
+            offsets.append((o, l))
+        data_start = table_end
+    elif version == _VERSION:
+        table_end = _HDR.size + _OFFSET3.size * n
+        if len(buf) < table_end + _TABLE_CRC.size:
+            raise CorruptPageError("torn page: offset table truncated")
+        (stored,) = _TABLE_CRC.unpack_from(buf, table_end)
+        if crc32(bytes(buf[:table_end])) != stored:
+            raise CorruptPageError("page header checksum mismatch")
+        crcs = []
+        for i in range(n):
+            o, l, c = _OFFSET3.unpack_from(buf, _HDR.size + i * _OFFSET3.size)
+            offsets.append((o, l))
+            crcs.append(c)
+        data_start = table_end + _TABLE_CRC.size
+    else:
+        raise CorruptPageError(f"unsupported tensor page version {version}")
+    for o, l in offsets:
+        if o < data_start or o + l > len(buf):
+            raise CorruptPageError("torn page: record out of bounds")
+    return TensorPage(buf=buf, offsets=offsets, crcs=crcs, version=version)
+
+
+def verify_page(buf: bytes) -> TensorPage:
+    """Full integrity check: header/table framing plus per-record CRCs.
+
+    Returns the parsed page on success so callers (frame admission, the
+    scrubber, fsck) get the parse for free. Legacy v2 pages pass framing
+    and bounds checks only — they carry no checksums to verify.
+    """
+    page = read_page_header(buf)
+    if page.crcs is not None:
+        for i, ((o, l), c) in enumerate(zip(page.offsets, page.crcs)):
+            if c and crc32(bytes(buf[o:o + l])) != c:
+                raise CorruptPageError(f"record {i} checksum mismatch")
+    return page
 
 
 def read_record(page: TensorPage, i: int, with_payload: bool = True,
@@ -192,19 +269,76 @@ def read_page_refs(f) -> list[tuple[int, int]]:
     is O(records), not O(page bytes). ``f`` is an open binary file.
     """
     f.seek(0)
-    magic, version, n = _HDR.unpack(f.read(_HDR.size))
+    hdr = f.read(_HDR.size)
+    try:
+        magic, version, n = _HDR.unpack(hdr)
+    except struct.error as exc:
+        raise CorruptPageError("truncated page header") from exc
     if magic != _MAGIC:
-        raise ValueError("not a NeurStore tensor page")
-    if version != _VERSION:
-        raise ValueError(f"unsupported tensor page version {version}")
-    table = f.read(_OFFSET.size * n)
+        raise CorruptPageError("not a NeurStore tensor page")
+    if version == _LEGACY_VERSION:
+        entry = _OFFSET
+        table = f.read(entry.size * n)
+        if len(table) < entry.size * n:
+            raise CorruptPageError("torn page: offset table truncated")
+    elif version == _VERSION:
+        entry = _OFFSET3
+        table = f.read(entry.size * n + _TABLE_CRC.size)
+        if len(table) < entry.size * n + _TABLE_CRC.size:
+            raise CorruptPageError("torn page: offset table truncated")
+        (stored,) = _TABLE_CRC.unpack_from(table, entry.size * n)
+        if crc32(hdr + table[:entry.size * n]) != stored:
+            raise CorruptPageError("page header checksum mismatch")
+    else:
+        raise CorruptPageError(f"unsupported tensor page version {version}")
     refs = []
     for i in range(n):
-        o, _l = _OFFSET.unpack_from(table, i * _OFFSET.size)
+        o = entry.unpack_from(table, i * entry.size)[0]
         f.seek(o + _VERTEX_OFF)
-        vertex, dim = struct.unpack("<qQ", f.read(16))
+        raw = f.read(16)
+        if len(raw) < 16:
+            raise CorruptPageError("torn page: record out of bounds")
+        vertex, dim = struct.unpack("<qQ", raw)
         refs.append((int(dim), int(vertex)))
     return refs
+
+
+def salvage_page_refs(buf: bytes) -> list[tuple[int, int]]:
+    """Best-effort ``(dim_key, vertex_id)`` refs from a *damaged* page.
+
+    Only records whose stored CRC still verifies contribute (v2 pages and
+    CRC-less records: any in-bounds record). Quarantine-path reference
+    accounting uses this where under-counting is the safe direction — a
+    missed ref merely leaks (``rebuild_vertex_refs`` reclaims it later),
+    while an invented ref could keep a dead base alive or, worse, free a
+    live one on the decrement side. Never raises.
+    """
+    try:
+        magic, version, n = _HDR.unpack_from(buf, 0)
+    except struct.error:
+        return []
+    if magic != _MAGIC:
+        return []
+    if version == _VERSION:
+        entry, has_crc = _OFFSET3, True
+    elif version == _LEGACY_VERSION:
+        entry, has_crc = _OFFSET, False
+    else:
+        return []
+    out: list[tuple[int, int]] = []
+    for i in range(n):
+        base = _HDR.size + i * entry.size
+        if base + entry.size > len(buf):
+            break  # table itself is torn (or n is garbage)
+        fields = entry.unpack_from(buf, base)
+        o, l = fields[0], fields[1]
+        if o + l > len(buf) or o + _VERTEX_OFF + 16 > len(buf):
+            continue
+        if has_crc and fields[2] and crc32(bytes(buf[o:o + l])) != fields[2]:
+            continue
+        vertex, dim = struct.unpack_from("<qQ", buf, o + _VERTEX_OFF)
+        out.append((int(dim), int(vertex)))
+    return out
 
 
 def page_dim_keys(page: TensorPage) -> set[int]:
@@ -238,16 +372,28 @@ def remap_page_vertices(buf: bytes, remap: dict[int, int], dim_key: int) -> tupl
     """
     page = read_page_header(buf)
     out = bytearray(buf)
-    changed = False
-    for o, _l in page.offsets:
+    changed_idx = []
+    for i, (o, _l) in enumerate(page.offsets):
         vertex, dim = struct.unpack_from("<qQ", buf, o + _VERTEX_OFF)
         if dim != dim_key:
             continue
         nv = remap[vertex]
         if nv != vertex:
             struct.pack_into("<q", out, o + _VERTEX_OFF, nv)
-            changed = True
-    return bytes(out), changed
+            changed_idx.append(i)
+    if changed_idx and page.crcs is not None:
+        # Patched records invalidate their stored CRCs; re-seal them and
+        # the table CRC so the rewritten page still verifies.
+        for i in changed_idx:
+            if page.crcs[i]:
+                o, l = page.offsets[i]
+                struct.pack_into(
+                    "<I", out, _HDR.size + i * _OFFSET3.size + 16,
+                    crc32(bytes(out[o:o + l])),
+                )
+        table_end = _HDR.size + _OFFSET3.size * len(page.offsets)
+        _TABLE_CRC.pack_into(out, table_end, crc32(bytes(out[:table_end])))
+    return bytes(out), bool(changed_idx)
 
 
 def read_record_partial(page: TensorPage, i: int, bits: int,

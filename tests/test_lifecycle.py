@@ -547,6 +547,7 @@ def test_catalog_loads_seed_format_meta(tmp_path):
         meta = json.load(f)
     for entry in meta["models"].values():
         entry.pop("status", None)
+    meta.pop("integrity", None)  # seed snapshots carry no checksum stamp
     with open(meta_path, "w") as f:
         json.dump(meta, f)
     os.unlink(os.path.join(str(tmp_path), "journal.jsonl"))

@@ -1,0 +1,307 @@
+#!/usr/bin/env python
+"""Offline checker / repairer for a NeurStore store directory.
+
+Check phase (read-only, no engine): verifies the ``meta.json`` snapshot
+CRC (and the ``.prev`` fallback), classifies journal damage (torn tail vs
+corrupt body), verifies every model page's framing + per-record checksums,
+verifies every HNSW index file's frame CRC + deserialization, cross-checks
+the ``vertex_refs`` table against the references actually present in
+healthy committed pages, and flags dangling base references and orphan
+files. ``errors`` are integrity violations; ``warnings`` are survivable
+states the engine handles itself (pending transactions, quarantined
+models, orphans awaiting the open-time sweep).
+
+Repair phase (``--repair``): promotes ``meta.json.prev`` over a corrupt
+``meta.json`` (the damaged file is kept as ``meta.json.corrupt``), sets
+aside a body-corrupt journal, then opens a :class:`StorageEngine` — which
+replays pending transactions, truncates any torn journal tail and sweeps
+orphans — and runs ``verify_store(quarantine=True)`` so damaged models are
+quarantined in the catalog. With ``--drop-corrupt`` the quarantined models
+are deleted, corrupt index files they referenced are removed, and the
+reference table is rebuilt wholesale from the surviving pages.
+
+Exit status: 0 if the store is clean (no errors; warnings allowed), 1
+otherwise. See ``docs/durability.md`` for the corruption contract.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_SRC = os.path.join(os.path.dirname(_HERE), "src")
+if _SRC not in sys.path:  # runnable as a script from a checkout
+    sys.path.insert(0, _SRC)
+
+from repro.core.catalog import (  # noqa: E402
+    STATUS_COMMITTED,
+    STATUS_CORRUPT,
+    CatalogState,
+    read_journal,
+)
+from repro.core.engine import StorageEngine  # noqa: E402
+from repro.core.hnsw import HNSWIndex  # noqa: E402
+from repro.core.integrity import (  # noqa: E402
+    CorruptMetaError,
+    CorruptPageError,
+    parse_meta,
+    unframe_index,
+)
+from repro.core.pages import page_dim_keys, read_record, verify_page  # noqa: E402
+
+__all__ = ["fsck"]
+
+
+def _read(path: str) -> bytes:
+    with open(path, "rb") as f:
+        return f.read()
+
+
+def _load_meta(root: str, rep: dict) -> CatalogState | None:
+    """Parse meta.json (or its .prev fallback), recording errors/warnings."""
+    meta = os.path.join(root, "meta.json")
+    prev = meta + ".prev"
+    primary: str | None = None
+    if os.path.exists(meta):
+        try:
+            return CatalogState.from_dict(
+                parse_meta(_read(meta).decode("utf-8"), meta)
+            )
+        except (CorruptMetaError, UnicodeDecodeError) as exc:
+            primary = f"meta.json corrupt: {exc}"
+    elif os.path.exists(prev):
+        primary = "meta.json missing but meta.json.prev exists"
+    else:
+        return CatalogState()  # fresh/empty store
+    try:
+        state = CatalogState.from_dict(
+            parse_meta(_read(prev).decode("utf-8"), prev)
+        )
+        rep["warnings"].append(f"{primary} — last good snapshot (.prev) usable")
+        return state
+    except (OSError, CorruptMetaError, UnicodeDecodeError) as exc:
+        rep["errors"].append(f"{primary}; fallback unusable: {exc}")
+        return None
+
+
+def _check(root: str, rep: dict) -> None:
+    state = _load_meta(root, rep)
+    if state is None:
+        return  # nothing else is trustworthy without a catalog
+
+    records, _max_tx, torn, corrupt = read_journal(
+        os.path.join(root, "journal.jsonl")
+    )
+    if corrupt is not None:
+        rep["errors"].append(f"journal body corrupt: {corrupt}")
+    elif torn is not None:
+        rep["warnings"].append(
+            f"torn journal tail at byte {torn} (truncated at next open)"
+        )
+    pending = {
+        int(r.get("tx", 0)) for r in records if r.get("op") != "commit"
+    } - {int(r.get("tx", 0)) for r in records if r.get("op") == "commit"}
+    if pending:
+        rep["warnings"].append(
+            f"{len(pending)} pending transaction(s) (replayed at next open)"
+        )
+
+    # Index files: frame CRC + deserialization.
+    indexes: dict[int, HNSWIndex] = {}
+    bad_dims: set[int] = set()
+    index_dir = os.path.join(root, "index")
+    for fname in sorted(os.listdir(index_dir)) if os.path.isdir(index_dir) else []:
+        if not (fname.startswith("hnsw_") and fname.endswith(".idx")):
+            continue
+        dim = int(fname[len("hnsw_"):-len(".idx")])
+        path = os.path.join(index_dir, fname)
+        try:
+            indexes[dim] = HNSWIndex.from_bytes(unframe_index(_read(path), path))
+        except Exception as exc:
+            rep["errors"].append(f"index {fname} corrupt: {exc}")
+            bad_dims.add(dim)
+
+    # Model pages: framing + per-record CRCs; derive refs from healthy ones.
+    derived: dict[str, int] = {}
+    referenced_pages: set[str] = set()
+    for name, entry in sorted(state.models.items()):
+        referenced_pages.add(entry.page)
+        if entry.status == STATUS_CORRUPT:
+            rep["warnings"].append(f"model {name!r} is quarantined")
+            continue
+        if entry.status != STATUS_COMMITTED:
+            rep["warnings"].append(
+                f"model {name!r} has status {entry.status!r} "
+                "(rolled back at next open)"
+            )
+            continue
+        path = os.path.join(root, "pages", entry.page)
+        try:
+            page = verify_page(_read(path))
+        except FileNotFoundError:
+            rep["errors"].append(f"model {name!r}: page {entry.page} missing")
+            continue
+        except CorruptPageError as exc:
+            rep["errors"].append(
+                f"model {name!r}: page {entry.page} corrupt: {exc}"
+            )
+            continue
+        dims = page_dim_keys(page)
+        broken = sorted(dims & bad_dims)
+        if broken:
+            rep["errors"].append(
+                f"model {name!r} references corrupt index dim(s) {broken}"
+            )
+        for i in range(page.n_records):
+            r = read_record(page, i, with_payload=False)
+            key = f"{r.dim_key}:{r.vertex_id}"
+            derived[key] = derived.get(key, 0) + 1
+            idx = indexes.get(r.dim_key)
+            if r.dim_key in bad_dims:
+                continue
+            if idx is None:
+                rep["errors"].append(
+                    f"model {name!r} references dim {r.dim_key} "
+                    "but no index file exists"
+                )
+            elif not (0 <= r.vertex_id < len(idx)) or idx.is_deleted(r.vertex_id):
+                rep["errors"].append(
+                    f"model {name!r}: dangling base reference "
+                    f"{r.dim_key}:{r.vertex_id}"
+                )
+
+    # Reference table vs derived. Quarantined models and pending
+    # transactions legitimately leave the table a superset (their records
+    # are uncounted above); missing references are always an error.
+    loose = bool(state.models) and (
+        any(e.status != STATUS_COMMITTED for e in state.models.values())
+        or bool(pending)
+    )
+    for key, count in sorted(derived.items()):
+        have = int(state.vertex_refs.get(key, 0))
+        if have < count:
+            rep["errors"].append(
+                f"vertex_refs[{key}] = {have} < {count} live references"
+            )
+    extra = {
+        k: int(v) for k, v in state.vertex_refs.items()
+        if int(v) > derived.get(k, 0)
+    }
+    if extra:
+        msg = f"{len(extra)} leaked vertex reference(s) (e.g. {next(iter(sorted(extra)))})"
+        if loose:
+            rep["warnings"].append(msg + " — expected with pending/quarantined state")
+        else:
+            rep["warnings"].append(msg + " — rebuild with --repair --drop-corrupt")
+
+    # Orphan files (the engine sweeps these at open).
+    pages_dir = os.path.join(root, "pages")
+    for fname in sorted(os.listdir(pages_dir)) if os.path.isdir(pages_dir) else []:
+        if fname not in referenced_pages:
+            rep["warnings"].append(
+                f"orphan page file {fname} (swept at next open)"
+            )
+
+
+def _repair(root: str, rep: dict, drop_corrupt: bool) -> None:
+    actions = rep["actions"]
+    meta = os.path.join(root, "meta.json")
+    prev = meta + ".prev"
+
+    def _meta_ok(path: str) -> bool:
+        try:
+            parse_meta(_read(path).decode("utf-8"), path)
+            return True
+        except (OSError, CorruptMetaError, UnicodeDecodeError):
+            return False
+
+    if not _meta_ok(meta):
+        if not _meta_ok(prev):
+            return  # unrecoverable — leave every byte for forensics
+        if os.path.exists(meta):
+            os.replace(meta, meta + ".corrupt")
+            actions.append("kept damaged snapshot as meta.json.corrupt")
+        with open(meta, "wb") as f:
+            f.write(_read(prev))
+            f.flush()
+            os.fsync(f.fileno())
+        actions.append("promoted meta.json.prev over corrupt meta.json")
+
+    journal = os.path.join(root, "journal.jsonl")
+    _records, _max_tx, _torn, corrupt = read_journal(journal)
+    if corrupt is not None:
+        os.replace(journal, journal + ".corrupt")
+        actions.append("set aside body-corrupt journal as journal.jsonl.corrupt")
+
+    # Opening the engine replays pending transactions, truncates a torn
+    # journal tail, and sweeps orphan files.
+    eng = StorageEngine(root)
+    try:
+        verdict = eng.verify_store(quarantine=True)
+        if verdict["quarantined"]:
+            actions.append(
+                f"quarantined corrupt model(s): {sorted(verdict['quarantined'])}"
+            )
+        if drop_corrupt:
+            dropped = eng.drop_corrupt_models()
+            if dropped:
+                actions.append(f"dropped corrupt model(s): {sorted(dropped)}")
+            for dim, status in verdict["indexes"].items():
+                if not str(status).startswith("corrupt"):
+                    continue
+                path = eng.index_cache._path(dim)
+                if os.path.exists(path):
+                    os.unlink(path)
+                    actions.append(f"removed corrupt index hnsw_{dim}.idx")
+            eng.rebuild_vertex_refs()
+            actions.append("rebuilt vertex reference table from pages")
+    finally:
+        eng.close()
+
+
+def fsck(root: str, repair: bool = False, drop_corrupt: bool = False) -> dict:
+    """Check (and optionally repair) the store at ``root``.
+
+    Returns ``{"root", "errors", "warnings", "actions", "clean"}`` —
+    ``clean`` means no errors (warnings allowed). With ``repair=True``
+    the report reflects a fresh re-check *after* the repair actions.
+    """
+    rep: dict = {"root": root, "errors": [], "warnings": [], "actions": []}
+    _check(root, rep)
+    if repair:
+        _repair(root, rep, drop_corrupt)
+        rep["errors"], rep["warnings"] = [], []
+        _check(root, rep)
+    rep["clean"] = not rep["errors"]
+    return rep
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="fsck.py", description="Check / repair a NeurStore store"
+    )
+    ap.add_argument("root", help="store directory (contains meta.json)")
+    ap.add_argument("--repair", action="store_true",
+                    help="repair what is safely repairable")
+    ap.add_argument("--drop-corrupt", action="store_true",
+                    help="with --repair: delete quarantined models and "
+                         "rebuild the reference table")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit the report as JSON")
+    args = ap.parse_args(argv)
+    rep = fsck(args.root, repair=args.repair, drop_corrupt=args.drop_corrupt)
+    if args.as_json:
+        print(json.dumps(rep, indent=2))
+    else:
+        for kind in ("errors", "warnings", "actions"):
+            for line in rep[kind]:
+                print(f"{kind[:-1]}: {line}")
+        print("clean" if rep["clean"] else "NOT clean")
+    return 0 if rep["clean"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
