@@ -36,6 +36,8 @@ MIN_BATCH_INGEST_SPEEDUP = 1.0
 MIN_BATCH_SAVE_SPEEDUP = 0.8
 MIN_CONCURRENT_READ_SPEEDUP = 1.0
 MIN_CHECKSUM_RATIO = 0.9
+MIN_COMPRESSED_THROUGHPUT = 0.8
+MAX_COMPRESSED_BYTES_RATIO = 1.0  # strict: compressed must move FEWER bytes
 
 
 def check_file(path: str) -> list[str]:
@@ -105,6 +107,35 @@ def check_file(path: str) -> list[str]:
     elif "durability" in path:
         errors.append(f"{path}: no checksum_overhead section — the "
                       "integrity tax was not measured")
+    if "compressed_serve" in res:
+        for name, ph in res["compressed_serve"]["phases"].items():
+            bytes_ratio = ph["bytes_ratio"]
+            tp_ratio = ph["throughput_ratio"]
+            if bytes_ratio >= MAX_COMPRESSED_BYTES_RATIO:
+                errors.append(
+                    f"{path}: [{name}] compressed serving moved as many "
+                    f"weight bytes as materialize-then-serve "
+                    f"(bytes_ratio={bytes_ratio:.3f} >= "
+                    f"{MAX_COMPRESSED_BYTES_RATIO})")
+            if tp_ratio < MIN_COMPRESSED_THROUGHPUT:
+                errors.append(
+                    f"{path}: [{name}] compressed serving throughput fell "
+                    f"below {MIN_COMPRESSED_THROUGHPUT:.0%} of materialized "
+                    f"(throughput_ratio={tp_ratio:.3f})")
+            if not ph["int4"]["tokens_match"]:
+                errors.append(
+                    f"{path}: [{name}] int4 compressed decode diverged "
+                    "from the materialized decode at the same precision")
+            if (bytes_ratio < MAX_COMPRESSED_BYTES_RATIO
+                    and tp_ratio >= MIN_COMPRESSED_THROUGHPUT
+                    and ph["int4"]["tokens_match"]):
+                print(f"{path}: [{name}] compressed serve "
+                      f"{tp_ratio:.2f}x throughput, {bytes_ratio:.2f}x bytes "
+                      f"(int4 {ph['int4']['bytes_ratio_vs_materialized']:.2f}x"
+                      ", parity ok)")
+    elif "compressed" in path:
+        errors.append(f"{path}: no compressed_serve section — "
+                      "compressed-domain serving was not measured")
     return errors
 
 

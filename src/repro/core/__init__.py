@@ -2,6 +2,7 @@
 
 from .bufferpool import BufferPool, PageFrame
 from .catalog import Catalog, CatalogState, ModelEntry
+from .compressed import CompressedModel, CompressedTensor
 from .engine import DEFAULT_TAU, DEFAULT_TOLERANCE, SaveReport, StorageEngine
 from .faultfs import FaultCrash, FaultFS, FaultInjected, FaultPlan
 from .hnsw import HNSWIndex, quantized_l2_batch
@@ -14,6 +15,8 @@ from .integrity import (
     ReadOnlyStoreError,
 )
 from .loader import (
+    CompressedParams,
+    KernelNotReady,
     LoadedModel,
     ModelSnapshot,
     PipelineLoader,
@@ -37,6 +40,9 @@ __all__ = [
     "BufferPool",
     "Catalog",
     "CatalogState",
+    "CompressedModel",
+    "CompressedParams",
+    "CompressedTensor",
     "CorruptIndexError",
     "CorruptJournalError",
     "CorruptMetaError",
@@ -49,6 +55,7 @@ __all__ = [
     "FaultPlan",
     "HNSWIndex",
     "IntegrityError",
+    "KernelNotReady",
     "ReadOnlyStoreError",
     "MaintenanceDaemon",
     "ModelEntry",

@@ -1670,14 +1670,149 @@ class StorageEngine:
         )
 
     def load_models(self, names, bits: int | None = None) -> list:
-        """Open handles over several models (the multi-save counterpart).
+        """Open handles over several models under ONE snapshot epoch.
 
         Returns one :class:`~repro.core.loader.LoadedModel` per name, in
-        order. Feed the result to
-        :func:`repro.core.loader.materialize_many` to reconstruct them with
+        order. Unlike a loop of :meth:`load_model` calls — where a writer
+        committing between two captures hands the batch a mixed-epoch,
+        mutually inconsistent view — the whole set is validated and
+        captured inside a single critical section, so every handle shares
+        the same epoch. Page I/O and header parsing still run outside the
+        lock (the expensive part); the critical section only re-validates
+        entries and stamps snapshots, retrying the batch when a writer
+        raced the reads. Feed the result to
+        :func:`repro.core.loader.materialize_many` to reconstruct with
         each base shared *across* handles de-quantized once.
         """
-        return [self.load_model(name, bits=bits) for name in names]
+        from .loader import LoadedModel, ModelSnapshot
+
+        names = list(names)
+        if not names:
+            return []
+        self._drain_released()
+        for _attempt in range(64):
+            # Phase 1 (no lock held across I/O): resolve each name to its
+            # committed page, pin + parse the frame. Same race handling as
+            # load_model — FileNotFoundError means a delete/replace/vacuum
+            # won; retry the whole batch so the view stays one-epoch.
+            # Entries are mutable lists: once a ModelSnapshot takes
+            # ownership of a frame (its finalizer unpins), the slot is
+            # nulled so the failure path can't double-unpin it.
+            prepared: list = []  # [name, page_name, frame, page, dims]
+            corrupt_at: list = []  # (name, page_name) of an index failure
+
+            def _unpin_prepared() -> None:
+                for rec in prepared:
+                    if rec[2] is not None:
+                        self.page_pool.unpin(rec[2])
+                        rec[2] = None
+
+            try:
+                for name in names:
+                    with self._lock:
+                        entry = self.catalog.get(name)
+                        if entry is None or entry.status != STATUS_COMMITTED:
+                            if (entry is not None
+                                    and entry.status == STATUS_CORRUPT):
+                                raise self._corrupt_error(name)
+                            raise KeyError(name)
+                        page_name = entry.page
+                    frame = None
+                    try:
+                        frame = self.page_pool.get(
+                            page_name,
+                            lambda: self._read_page_bytes(page_name),
+                        )
+                        page = self._parse_frame(frame)
+                        dims = page_dim_keys(page)
+                    except FileNotFoundError as exc:
+                        if frame is not None:
+                            self.page_pool.unpin(frame)
+                        if self.read_only:
+                            self._quarantine_model(
+                                name, page_name, f"page file missing: {exc}"
+                            )
+                            raise self._corrupt_error(name) from exc
+                        raise _Retry from exc
+                    except CorruptPageError as exc:
+                        if frame is not None:
+                            self.page_pool.unpin(frame)
+                        self._quarantine_model(name, page_name, str(exc))
+                        raise
+                    except BaseException:
+                        if frame is not None:
+                            self.page_pool.unpin(frame)
+                        raise
+                    prepared.append([name, page_name, frame, page, dims])
+
+                # Phase 2: ONE critical section — re-validate every entry
+                # against the page version actually pinned, then stamp all
+                # snapshots with the same epoch.
+                with self._lock:
+                    entries = []
+                    for name, page_name, _frame, _page, dims in prepared:
+                        cur = self.catalog.get(name)
+                        if cur is not None and cur.status == STATUS_CORRUPT:
+                            raise self._corrupt_error(name)
+                        if (cur is None or cur.status != STATUS_COMMITTED
+                                or cur.page != page_name):
+                            raise _Retry
+                        for dim in dims:
+                            self._check_quarantine(dim)
+                        entries.append(dataclasses.replace(cur))
+                    index_sets = []
+                    for rec in prepared:
+                        name, page_name, _fr, _pg, dims = rec
+                        corrupt_at[:] = [(name, page_name)]
+                        indexes: dict[int, HNSWIndex] = {}
+                        for dim in dims:
+                            idx = self.index_cache.get(dim)
+                            if idx is None:
+                                raise RuntimeError(
+                                    f"model {name!r} references dim {dim} "
+                                    "but no index exists for it (corrupt "
+                                    "store?)"
+                                )
+                            indexes[dim] = idx
+                        index_sets.append(indexes)
+                    epoch = self.catalog.state.epoch
+                    snaps = []
+                    for rec, cur, indexes in zip(
+                            prepared, entries, index_sets):
+                        frame = rec[2]
+                        token = self._snap_token
+                        self._snap_token += 1
+                        self._live_snapshots[token] = epoch
+                        snaps.append(ModelSnapshot(
+                            epoch=epoch, entry=cur, frame=frame,
+                            indexes=indexes,
+                            release=_SnapshotRelease(
+                                self._released, token, frame),
+                        ))
+                        rec[2] = None  # frame now owned by the snapshot
+            except _Retry:
+                _unpin_prepared()
+                continue
+            except CorruptIndexError as exc:
+                # Index damage discovered during capture: quarantine the
+                # model whose dims were being resolved; fail the batch typed
+                # (other models stay healthy).
+                _unpin_prepared()
+                for name, page_name in corrupt_at:
+                    self._quarantine_model(name, page_name, str(exc))
+                raise
+            except BaseException:
+                _unpin_prepared()
+                raise
+            return [
+                LoadedModel(engine=self, page=rec[3], info=snap.entry,
+                            bits=bits, snapshot=snap)
+                for rec, snap in zip(prepared, snaps)
+            ]
+        raise RuntimeError(
+            f"load_models({names!r}): catalog kept changing under the batch "
+            "capture loop (writer livelock?)"
+        )
 
     # ------------------------------------------------------------- integrity
     def scrub(self, max_models: int = 1) -> dict:

@@ -41,6 +41,7 @@ import queue
 import threading
 import weakref
 from collections import Counter
+from collections.abc import Mapping
 
 import numpy as np
 
@@ -49,9 +50,19 @@ from .pages import TensorPage, TensorRecord, decode_payload, read_record, read_r
 from .quantize import dequantize_delta, dequantize_linear
 
 __all__ = [
-    "LoadedModel", "ModelSnapshot", "PipelineLoader", "materialize_many",
-    "reconstruct_jnp",
+    "CompressedParams", "KernelNotReady", "LoadedModel", "ModelSnapshot",
+    "PipelineLoader", "materialize_many", "reconstruct_jnp",
 ]
+
+
+class KernelNotReady(RuntimeError):
+    """A tensor's delta codes exceed the fused kernels' 8-bit operand width.
+
+    Full-precision loads keep ~17-bit deltas; the int8/int4 compute-on-
+    compressed kernels need ``nbit <= 8``. Reload the model with flexible
+    loading (``load_model(name, bits=8)`` or ``bits=4``) for kernel-ready
+    parameters (paper §4.3.1).
+    """
 
 
 def reconstruct_jnp(base_codes, base_scale, base_zp, qdelta, delta_scale, delta_zp):
@@ -236,40 +247,88 @@ class LoadedModel:
         return {name: self.tensor(name) for name in list(self._order)}
 
     # ------------------------------------------ compressed (augmented graph)
-    def compressed_params(self) -> dict[str, dict]:
-        """Per-tensor quantized components for compute-on-compressed.
+    def _compressed_entry(self, name: str) -> dict:
+        """Build one tensor's quantized-component entry (Alg. 2 lines 4-5)."""
+        rec = self._ensure_decoded(self._records[name])
+        index = self._index_for(rec)
+        codes, bmeta = index.vertex_codes(rec.vertex_id)
+        # int8-safe recentring for the TPU kernels: uint8 codes c with
+        # zero-point z dequantize identically as (c-128) with (z-128),
+        # and (c-128) fits int8 exactly. Only valid when nbit <= 8 —
+        # use flexible loading (bits=8) for kernel-ready params.
+        entry = {
+            "shape": rec.shape,
+            "base_codes": (codes.astype(np.int16) - 128)
+            .astype(np.int8).reshape(rec.shape),
+            "base_scale": np.float32(bmeta.scale),
+            "base_zp": np.float32(bmeta.zero_point - 128),
+            "base_mid": np.float32(bmeta.mid),
+            "qdelta": rec.qdelta.reshape(rec.shape),
+            "delta_scale": np.float32(rec.meta.scale),
+            "delta_zp": np.float32(rec.meta.zero_point),
+            "delta_mid": np.float32(rec.meta.mid),
+            "nbit": rec.meta.nbit,
+        }
+        if rec.meta.nbit <= 8:
+            entry["qdelta_i8"] = ((rec.qdelta - 128).astype(np.int8)
+                                  .reshape(rec.shape))
+            entry["delta_zp_i8"] = np.float32(rec.meta.zero_point - 128)
+        return entry
 
-        Each entry carries exactly what Alg. 2 retrieves (lines 4-5): the
-        int8 base codes + (scale, zp), the quantized delta codes + (scale,
-        zp, nbit). Feed these to ``reconstruct_jnp`` or to the fused
-        ``dequant_matmul`` kernel.
+    def compressed_params(self) -> "CompressedParams":
+        """Lazy per-tensor quantized components for compute-on-compressed.
+
+        Returns a mapping whose entries are built on first access — a
+        caller serving a subset of tensors (the common case: a decoder's
+        matmul weights, not its norm vectors) pays payload decode and
+        reshape cost only for what it touches, with the same laziness
+        contract as ``tensor(name)``. Each entry carries exactly what
+        Alg. 2 retrieves (lines 4-5): the int8 base codes + (scale, zp),
+        the quantized delta codes + (scale, zp, nbit). Feed entries to
+        ``reconstruct_jnp``, or :meth:`CompressedParams.kernel_operands`
+        for the fused ``dequant_matmul`` kernels.
         """
-        out = {}
-        for name in self._order:
-            rec = self._ensure_decoded(self._records[name])
-            index = self._index_for(rec)
-            codes, bmeta = index.vertex_codes(rec.vertex_id)
-            # int8-safe recentring for the TPU kernels: uint8 codes c with
-            # zero-point z dequantize identically as (c-128) with (z-128),
-            # and (c-128) fits int8 exactly. Only valid when nbit <= 8 —
-            # use flexible loading (bits=8) for kernel-ready params.
-            kernel_ready = rec.meta.nbit <= 8
-            out[name] = {
-                "shape": rec.shape,
-                "base_codes": (codes.astype(np.int16) - 128)
-                .astype(np.int8).reshape(rec.shape),
-                "base_scale": np.float32(bmeta.scale),
-                "base_zp": np.float32(bmeta.zero_point - 128),
-                "base_mid": np.float32(bmeta.mid),
-                "qdelta": rec.qdelta.reshape(rec.shape),
-                "qdelta_i8": ((rec.qdelta - 128).astype(np.int8)
-                              .reshape(rec.shape) if kernel_ready else None),
-                "delta_scale": np.float32(rec.meta.scale),
-                "delta_zp": np.float32(rec.meta.zero_point),
-                "delta_zp_i8": np.float32(rec.meta.zero_point - 128),
-                "nbit": rec.meta.nbit,
-            }
-        return out
+        return CompressedParams(self)
+
+
+class CompressedParams(Mapping):
+    """Lazy name → quantized-components view over a :class:`LoadedModel`.
+
+    Dict-compatible (iteration, ``len``, ``in``, ``.values()``...), but
+    entries decode on first ``[name]`` access and are cached. Kernel-ready
+    int8 recentrings (``qdelta_i8``/``delta_zp_i8``) are present only when
+    the record's delta fits 8 bits; :meth:`kernel_operands` converts their
+    absence into a typed :class:`KernelNotReady` instead of a KeyError.
+    """
+
+    def __init__(self, lm: "LoadedModel"):
+        self._lm = lm
+        self._entries: dict[str, dict] = {}
+
+    def __iter__(self):
+        return iter(self._lm._order)
+
+    def __len__(self) -> int:
+        return len(self._lm._order)
+
+    def __contains__(self, name) -> bool:
+        return name in self._lm._records
+
+    def __getitem__(self, name: str) -> dict:
+        entry = self._entries.get(name)  # GIL-atomic; duplicate builds benign
+        if entry is None:
+            entry = self._entries.setdefault(name, self._lm._compressed_entry(name))
+        return entry
+
+    def kernel_operands(self, name: str) -> dict:
+        """The entry, guaranteed kernel-ready — or :class:`KernelNotReady`."""
+        entry = self[name]
+        if entry["nbit"] > 8:
+            raise KernelNotReady(
+                f"tensor {name!r}: delta quantized at {entry['nbit']} bits "
+                "> 8; reload with load_model(..., bits=8) for the fused "
+                "kernels")
+        return entry
 
 
 def materialize_many(models: list["LoadedModel"]) -> list[dict[str, np.ndarray]]:

@@ -13,6 +13,7 @@ oracles; tests validate in interpret mode (CPU) against the oracles.
 from . import ops, ref
 from .ops import (
     dequant_matmul,
+    dequant_matmul_auto,
     dequant_matmul_int4,
     flash_attention,
     pack_int4,
@@ -21,6 +22,7 @@ from .ops import (
 
 __all__ = [
     "dequant_matmul",
+    "dequant_matmul_auto",
     "dequant_matmul_int4",
     "flash_attention",
     "ops",

@@ -29,7 +29,7 @@ NEG_INF = -1e30
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-                  n_k, block_q, block_k, scale, causal, window):
+                  n_k, block_q, block_k, scale, causal, window, sk_true):
     kk = pl.program_id(2)
     qq = pl.program_id(1)
 
@@ -46,7 +46,11 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     q_pos = qq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
     k_pos = kk * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    mask = jnp.ones(s.shape, dtype=bool)
+    # Padded key positions (>= sk_true) get the large-negative bias so they
+    # never win the softmax — this is what makes non-block-aligned Sk safe
+    # for bidirectional (non-causal) inputs, where no causal mask would
+    # otherwise exclude them.
+    mask = k_pos < sk_true
     if causal:
         mask &= q_pos >= k_pos
     if window > 0:
@@ -70,15 +74,22 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+    static_argnames=("causal", "window", "block_q", "block_k", "sk_true",
+                     "interpret"))
 def flash_attention_pallas(q, k, v, *, causal=True, window=0,
-                           block_q=128, block_k=128, interpret=False):
+                           block_q=128, block_k=128, sk_true=None,
+                           interpret=False):
     """q: (B, Sq, H, dh); k, v: (B, Sk, KV, dh); grouped GQA, no KV repeat.
 
     Returns (B, Sq, H, dh). Sq % block_q == Sk % block_k == 0 (ops.py pads).
+    ``sk_true`` is the pre-padding key length: positions >= sk_true are
+    masked with the NEG_INF bias inside the kernel, so zero-padded k/v
+    rows never contribute softmax mass (defaults to Sk — no padding).
     """
     b, sq, h, dh = q.shape
     sk, kv = k.shape[1], k.shape[2]
+    if sk_true is None:
+        sk_true = sk
     g = h // kv
     scale = 1.0 / (dh ** 0.5)
     n_q = sq // block_q
@@ -93,7 +104,7 @@ def flash_attention_pallas(q, k, v, *, causal=True, window=0,
     out = pl.pallas_call(
         functools.partial(_flash_kernel, n_k=n_k, block_q=block_q,
                           block_k=block_k, scale=scale, causal=causal,
-                          window=window),
+                          window=window, sk_true=sk_true),
         grid=(b * kv * g, n_q, n_k),
         in_specs=[
             pl.BlockSpec((1, block_q, dh), lambda i, qq, kk: (i, qq, 0)),

@@ -15,9 +15,9 @@ from .dequant_matmul import dequant_matmul_int4_pallas, dequant_matmul_pallas
 from .flash_attention import flash_attention_pallas
 from .quantized_l2 import quantized_l2_pallas
 
-__all__ = ["dequant_matmul", "dequant_matmul_int4", "flash_attention",
-           "quantized_l2", "quantized_l2_auto", "pack_int4",
-           "KERNEL_DISPATCH_MIN_ELEMS"]
+__all__ = ["dequant_matmul", "dequant_matmul_auto", "dequant_matmul_int4",
+           "flash_attention", "quantized_l2", "quantized_l2_auto",
+           "pack_int4", "KERNEL_DISPATCH_MIN_ELEMS"]
 
 # Code blocks (N*D elements) below this floor never dispatch to the kernel:
 # the launch + host<->device transfer would swamp the distance math.
@@ -127,6 +127,78 @@ def dequant_matmul_int4(x, base, base_scale, base_zp, packed_delta,
     return y[:m, :n]
 
 
+def dequant_matmul_auto(x, base, base_scale, base_zp, delta, delta_scale,
+                        delta_zp, *, packed=False,
+                        min_elems: int = KERNEL_DISPATCH_MIN_ELEMS,
+                        force: str | None = None,
+                        scratch: dict | None = None) -> np.ndarray:
+    """Dispatch seam for compute-on-compressed matmuls (serving hot loop).
+
+    ``y = x @ (dq(base) + dq(delta))`` without ever materializing the
+    float weight. Routes to the fused Pallas kernel (``dequant_matmul``,
+    or ``dequant_matmul_int4`` when ``packed=True``) on a TPU backend when
+    the weight block is large enough to amortize the launch; otherwise
+    runs the decomposed CPU form
+
+        ``y = x@(bs·Bf + ds·Df) + (-bs·bz + ds·(0.5-dz))·rowsum(x)``
+
+    where ``bs·Bf + ds·Df`` is a single pre-scaled float32 combination of
+    the *codes* (cached in the caller-owned ``scratch`` dict across
+    calls, e.g. per decode step; valid only while operands and scales are
+    fixed) and the scalar zero-point/bin-centre term folds into a rowsum
+    correction, so the steady-state cost is one gemm — the same as
+    serving a materialized weight. On CPU this decomposition *is* the
+    fast path: interpret-mode Pallas executes the kernel body in Python.
+
+    ``x``: (M, K) float; ``base``: (K, N) int8 recentred codes; ``delta``:
+    (K, N) int8 recentred codes, or (K//2, N) uint8 nibble-packed when
+    ``packed=True`` (``pack_int4`` layout: row 2k low / 2k+1 high, codes
+    unsigned in [0, 15] with unsigned zero-point). Zero-points/scales are
+    scalars matching the code recentring.
+
+    ``force="kernel"`` runs the Pallas kernel regardless of backend/size
+    (interpret mode on CPU — the parity-test hook); ``force="numpy"``
+    always takes the decomposed path. Returns (M, N) float32 numpy.
+    """
+    if force not in (None, "kernel", "numpy"):
+        raise ValueError(f"force must be None, 'kernel' or 'numpy': {force!r}")
+    base = np.asarray(base)
+    use_kernel = force == "kernel" or (
+        force is None and _on_tpu() and base.size >= min_elems)
+    if use_kernel:
+        xj = jnp.asarray(np.asarray(x, dtype=np.float32))
+        fn = dequant_matmul_int4 if packed else dequant_matmul
+        y = fn(xj, jnp.asarray(base), float(base_scale), float(base_zp),
+               jnp.asarray(delta), float(delta_scale), float(delta_zp))
+        return np.asarray(y, dtype=np.float32)
+    ops = scratch.get("cpu") if scratch is not None else None
+    if ops is None:
+        bf = base.astype(np.float32) * np.float32(base_scale)
+        d = np.asarray(delta)
+        if packed:
+            # Unpack nibbles to the (K, N) code grid the decomposition
+            # needs; the HBM-traffic win of packing belongs to the TPU
+            # path — on CPU the one-time unpack is amortized via scratch.
+            k2, n = d.shape
+            low = (d & 0xF).astype(np.float32)
+            high = (d >> 4).astype(np.float32)
+            d = np.stack([low, high], axis=1).reshape(2 * k2, n)
+        else:
+            d = d.astype(np.float32)
+        d *= np.float32(delta_scale)
+        bf += d
+        c = np.float32(-float(base_scale) * float(base_zp)
+                       + float(delta_scale) * (0.5 - float(delta_zp)))
+        ops = (bf, c)
+        if scratch is not None:
+            scratch["cpu"] = ops
+    wf, c = ops
+    x32 = np.asarray(x, dtype=np.float32)
+    y = x32 @ wf
+    y += c * x32.sum(axis=1, keepdims=True)
+    return y
+
+
 def quantized_l2(query, codes, scales, zps, mids,
                  *, block_n=128, block_d=512, d_true=None, interpret=None):
     """HNSW distance hot loop; pads N and D, returns (N,) f32.
@@ -169,16 +241,12 @@ def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
     qp = _pad_to(q, bq, 1)
     kp = _pad_to(k, bk, 1)
     vp = _pad_to(v, bk, 1)
-    # Padded K positions must never win the softmax: they sit at positions
-    # >= sk; causal masking only protects them when q is also padded, so we
-    # rely on the window/causal mask plus explicit exclusion via position —
-    # padded k rows are zeros, scores 0, masked by causal for q<sk... For
-    # bidirectional (hubert) we mask by passing window=0/causal=False and
-    # slicing: scores with padded zero-keys add exp(0-m) mass — so instead
-    # mask via a large negative bias built into k: simplest correct route is
-    # requiring Sk % bk == 0 for non-causal inputs (asserted).
-    if not causal and (sk % bk or sq % bq):
-        raise ValueError("non-causal flash requires block-aligned Sq/Sk")
+    # Padded K positions must never win the softmax: the kernel masks
+    # positions >= sk with its large-negative bias (sk_true), which covers
+    # bidirectional (hubert-shaped) inputs at any length — causal masking
+    # alone only protected them when q ran ahead of k. Padded q rows
+    # attend real keys and produce finite garbage, sliced off below.
     out = flash_attention_pallas(qp, kp, vp, causal=causal, window=window,
-                                 block_q=bq, block_k=bk, interpret=interpret)
+                                 block_q=bq, block_k=bk, sk_true=sk,
+                                 interpret=interpret)
     return out[:, :sq]

@@ -69,7 +69,8 @@ def test_reader_never_takes_engine_lock_during_dequant(tmp_path):
 
     def read():
         result["out"] = lm.materialize()
-        result["params"] = lm.compressed_params()
+        cp = lm.compressed_params()
+        result["params"] = {name: cp[name] for name in cp}
 
     t = threading.Thread(target=read)
     with eng._lock:  # a writer mid-commit, as far as readers can tell

@@ -155,3 +155,89 @@ def test_flash_attention_matches_model_chunked_attention():
     got = ops.flash_attention(q, k, v, causal=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize(
+    "b,sq,sk,h,kv,dh",
+    [
+        (1, 37, 37, 4, 2, 64),     # non-aligned bidirectional (the old
+        (2, 50, 100, 8, 4, 32),    # ValueError path: sk % block_k != 0)
+        (1, 100, 50, 4, 4, 64),    # q longer than k
+    ],
+)
+def test_flash_attention_non_causal_padded_keys(b, sq, sk, h, kv, dh):
+    """Non-causal attention at non-block-multiple Sk: padded key positions
+    must be masked out by the kernel's sk_true bias, not win the softmax
+    (regression for the former ValueError/garbage at unaligned lengths)."""
+    q = jnp.asarray(RNG.normal(0, 1, (b, sq, h, dh)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (b, sk, kv, dh)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (b, sk, kv, dh)), jnp.float32)
+    want = ref.flash_attention_ref(q, k, v, causal=False, window=0)
+    got = ops.flash_attention(q, k, v, causal=False, block_q=32, block_k=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=2e-5)
+
+
+def _scalar_reconstruct(base_i8, bs, bz, packed, ds, dz):
+    """Element-wise host reconstruction of dq(base)+dq(delta) — the slow
+    obviously-correct oracle for the fused paths (bin-centre delta)."""
+    k, n = base_i8.shape
+    w = np.empty((k, n), np.float64)
+    for i in range(k):
+        byte_row = packed[i // 2]
+        for j in range(n):
+            nib = (byte_row[j] >> 4) if i % 2 else (byte_row[j] & 0xF)
+            w[i, j] = ((float(base_i8[i, j]) - bz) * bs
+                       + (float(nib) - dz + 0.5) * ds)
+    return w
+
+
+@pytest.mark.parametrize("k,n,m", [(130, 70, 1), (2, 3, 1), (64, 130, 5)])
+def test_dequant_matmul_auto_parity(k, n, m):
+    """Interpret-mode kernel == decomposed numpy == in-graph reconstruct ==
+    scalar host oracle, on odd shapes including K=2 and decode rows (M=1)."""
+    from repro.launch.compressed_serve import dequantize_leaf_jnp, quantize_leaf
+
+    arr = RNG.normal(0, 0.5, (k, n)).astype(np.float32)
+    q = quantize_leaf(arr)
+    x = RNG.normal(0, 1, (m, k)).astype(np.float32)
+
+    w_scalar = _scalar_reconstruct(q["base"], float(q["bs"]), float(q["bz"]),
+                                   q["packed"], float(q["ds"]), float(q["dz"]))
+    w_jnp = np.asarray(
+        dequantize_leaf_jnp(q, dtype=jnp.float32)).reshape(k, n)
+    np.testing.assert_allclose(w_jnp, w_scalar, rtol=1e-5, atol=1e-5)
+
+    want = x.astype(np.float64) @ w_scalar
+    for force in ("kernel", "numpy"):
+        got = ops.dequant_matmul_auto(
+            x, q["base"].reshape(k, n), float(q["bs"]), float(q["bz"]),
+            q["packed"], float(q["ds"]), float(q["dz"]),
+            packed=True, force=force)
+        scale = float(np.abs(want).max()) + 1e-6
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4 * scale,
+                                   err_msg=f"force={force}")
+
+
+def test_dequant_matmul_auto_int8_paths_agree():
+    """force=kernel (interpret Pallas) and force=numpy (decomposed gemm)
+    agree on the unpacked int8 delta layout, with and without scratch."""
+    k, n, m = 96, 200, 3
+    base = RNG.integers(-128, 128, (k, n)).astype(np.int8)
+    delta = RNG.integers(-128, 128, (k, n)).astype(np.int8)
+    x = RNG.normal(0, 1, (m, k)).astype(np.float32)
+    args = (x, base, 0.013, -11.0, delta, 3.1e-4, -64.0)
+    yk = ops.dequant_matmul_auto(*args, force="kernel")
+    scratch: dict = {}
+    yn = ops.dequant_matmul_auto(*args, force="numpy", scratch=scratch)
+    yn2 = ops.dequant_matmul_auto(*args, force="numpy", scratch=scratch)
+    assert "cpu" in scratch  # combined operand cached for the decode loop
+    np.testing.assert_allclose(yk, yn, rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(yn, yn2)
+
+
+def test_dequant_matmul_auto_rejects_bad_force():
+    with pytest.raises(ValueError):
+        ops.dequant_matmul_auto(
+            np.zeros((1, 2), np.float32), np.zeros((2, 2), np.int8),
+            1.0, 0.0, np.zeros((2, 2), np.int8), 1.0, 0.0, force="tpu")

@@ -333,8 +333,10 @@ def test_open_loader_survives_vacuum_remap(tmp_path):
     assert rep["vertices_dropped"] == 1
     out = lm.materialize()
     assert np.array_equal(out["w"], expect["w"])
-    # compressed_params sees the remapped base too.
-    lm.compressed_params()
+    # compressed_params sees the remapped base too (lazy: index to build).
+    cp = lm.compressed_params()
+    for name in cp:
+        assert cp[name]["shape"] == lm.tensor(name).shape
 
 
 def test_loader_over_deleted_model_keeps_its_snapshot(tmp_path):
@@ -355,7 +357,8 @@ def test_loader_over_deleted_model_keeps_its_snapshot(tmp_path):
     assert rep["vertices_dropped"] == 1
     out = lm.materialize()
     assert np.array_equal(out["w"], expect["w"])
-    lm.compressed_params()  # the compressed view stays valid too
+    cp = lm.compressed_params()  # the compressed view stays valid too
+    assert cp["w"]["base_codes"].size == expect["w"].size
     with pytest.raises(KeyError):
         eng.load_model("gone")
 
