@@ -21,9 +21,14 @@ The contract (docs/ingestion.md "CI perf-gate contract"):
   purpose (shared-runner core counts vary); the full acceptance bar is
   2x with 4 readers, checked on dev machines / in BENCH_concurrency.json.
 
+* ``BENCH_serving.json``: the HTTP front door must hold
+  ``read_vs_embedded_ratio >= 0.5`` at 4 clients with zero 5xx responses
+  and a finite p99 under writer churn (ISSUE 8 acceptance bar; the smoke
+  artifact is gated with the same invariants).
+
 Usage: ``python benchmarks/perf_gate.py BENCH_hnsw.json [BENCH_lifecycle.json]
-[BENCH_concurrency.json]``. Exits non-zero with a one-line reason per
-violated check.
+[BENCH_concurrency.json] [BENCH_serving.json]``. Exits non-zero with a
+one-line reason per violated check.
 """
 
 from __future__ import annotations
@@ -38,6 +43,7 @@ MIN_CONCURRENT_READ_SPEEDUP = 1.0
 MIN_CHECKSUM_RATIO = 0.9
 MIN_COMPRESSED_THROUGHPUT = 0.8
 MAX_COMPRESSED_BYTES_RATIO = 1.0  # strict: compressed must move FEWER bytes
+MIN_SERVED_READ_RATIO = 0.5  # served QPS vs embedded, 4 clients (ISSUE 8)
 
 
 def check_file(path: str) -> list[str]:
@@ -136,6 +142,34 @@ def check_file(path: str) -> list[str]:
     elif "compressed" in path:
         errors.append(f"{path}: no compressed_serve section — "
                       "compressed-domain serving was not measured")
+    if "serving" in res:
+        sv = res["serving"]
+        ratio = sv["read_vs_embedded_ratio"]
+        served = sv["served"]
+        if ratio < MIN_SERVED_READ_RATIO:
+            errors.append(
+                f"{path}: served read QPS fell below "
+                f"{MIN_SERVED_READ_RATIO}x embedded "
+                f"(read_vs_embedded_ratio={ratio:.3f})")
+        if served.get("errors_5xx", 0) != 0:
+            errors.append(
+                f"{path}: server returned {served['errors_5xx']} 5xx "
+                "responses under writer churn (must be 0)")
+        if not sv.get("p99_finite", False):
+            errors.append(
+                f"{path}: served p99 latency is not finite under writer "
+                "churn (reads starved or hung)")
+        if served.get("read_errors", 0) != 0:
+            errors.append(
+                f"{path}: {served['read_errors']} served reads raised "
+                "client-side (must be 0)")
+        if not errors:
+            print(f"{path}: served {served['qps']:.0f} qps "
+                  f"({ratio:.2f}x embedded, p99={served['p99_ms']:.0f}ms, "
+                  f"5xx=0) ok")
+    elif "serving" in path:
+        errors.append(f"{path}: no serving section — the HTTP front door "
+                      "was not measured")
     return errors
 
 

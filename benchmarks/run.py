@@ -20,7 +20,8 @@ def main() -> None:
     from . import (fig7_e2e, fig8_throughput, fig9_compression, fig10_tau,
                    fig11_flexible, fig12_tolerance, fig13_accuracy,
                    table2_stats, pipeline_bench, hnsw_bench, lifecycle_bench,
-                   concurrency_bench, durability_bench, compressed_serve_bench)
+                   concurrency_bench, durability_bench, compressed_serve_bench,
+                   serving_bench)
 
     args = [a for a in sys.argv[1:] if a != "--smoke"]
     smoke = "--smoke" in sys.argv[1:]
@@ -33,6 +34,7 @@ def main() -> None:
         "lifecycle": lifecycle_bench, "concurrency": concurrency_bench,
         "durability": durability_bench,
         "compressed_serve": compressed_serve_bench,
+        "serving": serving_bench,
     }
     csv = Csv()
     print("name,us_per_call,derived")

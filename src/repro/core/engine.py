@@ -111,12 +111,20 @@ from .quantize import (
     quantize_linear_batch,
 )
 
-__all__ = ["StorageEngine", "SaveReport", "DEFAULT_TOLERANCE", "DEFAULT_TAU"]
+__all__ = [
+    "StorageEngine", "SaveReport", "DEFAULT_TOLERANCE", "DEFAULT_TAU",
+    "STATS_SCHEMA_VERSION",
+]
 
 # Paper §4.2 Discussion: default p = 2^-24 (below f32 machine epsilon);
 # §6.1.3: default similarity threshold tau = 0.16.
 DEFAULT_TOLERANCE = 2.0 ** -24
 DEFAULT_TAU = 0.16
+
+# Version stamp on StorageEngine.stats(): the documented counters (see
+# docs/serving.md) are API — the serving admission policy and StoreStats
+# consume them — so layout changes must bump this.
+STATS_SCHEMA_VERSION = 1
 
 # Save-probe regime switch (`_probe_dim_group`): brute-force the whole
 # (G, N) distance block while the index is small or the group is fat
@@ -151,6 +159,15 @@ class SaveReport:
     @property
     def mean_nbit(self) -> float:
         return float(np.mean(self.nbits)) if self.nbits else 0.0
+
+    def to_dict(self) -> dict:
+        """JSON-safe form — this IS the wire body of a served save."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SaveReport":
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in names})
 
 
 class _Retry(Exception):
@@ -422,6 +439,16 @@ class StorageEngine:
         # index/pages/refs may be half-switched, so further use of the dim
         # must fail loudly until a reopen replays the journal.
         self._quarantined_dims: set[int] = set()
+        # Optional save-commit veto hook (the serving layer's quota
+        # enforcement point). Called under the engine lock, immediately
+        # before a save's journal intent, with a list of
+        # ``{"name", "page_bytes", "old_page_bytes"}`` dicts — one per
+        # model in the transaction. Raising aborts the save before any
+        # durable side effect is journaled (vertices already inserted in
+        # phase 1 become unreferenced and are swept by vacuum, the same
+        # contract as a crashed save). The hook must not invoke engine
+        # write operations; read-only catalog access is safe (RLock).
+        self.commit_gate = None
         self._lock = threading.RLock()
         self.maintenance = None
         self._recover()
@@ -451,6 +478,15 @@ class StorageEngine:
 
     def _page_path(self, model_id: int) -> str:
         return self._page_file(f"model_{model_id}.page")
+
+    def _page_size(self, entry: ModelEntry | None) -> int:
+        """On-disk bytes of an entry's page (0 when absent/unreadable)."""
+        if entry is None:
+            return 0
+        try:
+            return os.path.getsize(self._page_file(entry.page))
+        except OSError:
+            return 0
 
     def _unlink(self, path: str) -> None:
         try:
@@ -910,6 +946,12 @@ class StorageEngine:
             with self._lock:
                 old = self.catalog.get(name)
                 old_refs = self._page_refs(old.page) if old else Counter()
+                if self.commit_gate is not None:
+                    self.commit_gate([{
+                        "name": name,
+                        "page_bytes": len(page),
+                        "old_page_bytes": self._page_size(old),
+                    }])
                 model_id = self.catalog.allocate_id()
                 page_name = f"model_{model_id}.page"
                 intent = {
@@ -1103,6 +1145,15 @@ class StorageEngine:
                 old_refs = [
                     self._page_refs(o.page) if o else Counter() for o in olds
                 ]
+                if self.commit_gate is not None:
+                    self.commit_gate([
+                        {
+                            "name": names[mi],
+                            "page_bytes": len(pages[mi]),
+                            "old_page_bytes": self._page_size(olds[mi]),
+                        }
+                        for mi in range(len(specs))
+                    ])
                 model_ids = [self.catalog.allocate_id() for _ in specs]
                 page_names = [f"model_{mid}.page" for mid in model_ids]
                 intent_models = []
@@ -1985,19 +2036,27 @@ class StorageEngine:
 
     # ------------------------------------------------------------ accounting
     def stats(self) -> dict:
-        """Engine-wide concurrency counters (asserted by the tests).
+        """Engine-wide counters — a versioned API, not an internal dump.
+
+        ``schema_version`` stamps the layout (``STATS_SCHEMA_VERSION``);
+        every counter is documented in ``docs/serving.md``, and the
+        serving admission policy consumes only the documented fields
+        (through :class:`repro.store.api.StoreStats`).
 
         ``buffer_pool``: page-frame hits/misses/evictions, resident and
         pinned bytes, shared-decode hit rate. ``epoch``: the current
         snapshot-isolation epoch (bumped at every writer commit).
         ``snapshots``: live reader snapshots and the oldest epoch still
         pinned. ``index_cache``: the existing HNSW cache counters.
+        ``models``: committed (servable) catalog entries.
         """
         self._drain_released()
         with self._lock:
             live = list(self._live_snapshots.values())
             out = {
+                "schema_version": STATS_SCHEMA_VERSION,
                 "epoch": self.catalog.state.epoch,
+                "models": len(self.catalog.names()),
                 "snapshots": {
                     "live": len(live),
                     "oldest_epoch": min(live) if live else None,

@@ -246,6 +246,18 @@ class LoadedModel:
         """Full reconstruction of every tensor (the non-compression-aware path)."""
         return {name: self.tensor(name) for name in list(self._order)}
 
+    def iter_tensors(self):
+        """Stream ``(name, tensor)`` record-by-record, in page order.
+
+        The bounded-memory reconstruction path: one tensor is resident
+        at a time (plus the shared de-quantized base cache), so a
+        consumer that forwards each tensor — the serving layer's chunked
+        download — never holds the whole model as one buffer. Entirely
+        lock-free off the snapshot, like :meth:`materialize`.
+        """
+        for name in list(self._order):
+            yield name, self.tensor(name)
+
     # ------------------------------------------ compressed (augmented graph)
     def _compressed_entry(self, name: str) -> dict:
         """Build one tensor's quantized-component entry (Alg. 2 lines 4-5)."""

@@ -1,0 +1,147 @@
+"""The supported public facade over the NeurStore engine.
+
+``repro.store`` is the import path applications should use::
+
+    from repro.store import NeurStore, SaveRequest
+
+    store = NeurStore.open("/path/to/store")
+    store.save(SaveRequest("base", tensors, architecture={"family": "demo"}))
+    with store.load("base", bits=8) as handle:
+        params = handle.materialize()
+
+Everything here is a thin, *typed* veneer over
+:class:`repro.core.engine.StorageEngine` — the same
+:class:`~repro.store.api.SaveRequest` / :class:`~repro.store.api.SaveReport`
+/ :class:`~repro.store.api.LoadHandle` / :class:`~repro.store.api.StoreStats`
+dataclasses are used verbatim by the HTTP server handlers
+(``repro.server.app``) and the network client
+(``repro.server.client.StoreClient``), so code written against this
+facade runs unchanged against a remote store. The canonical knob set
+(``tolerance``/``tau`` defaults + per-save overrides, ``bits`` /
+``shared_cache`` per load) is documented in :mod:`repro.store.api` and
+``docs/serving.md``.
+
+``repro.core.engine`` remains importable for existing code (its
+``StorageEngine``/``SaveReport`` are exactly what this facade wraps),
+but new surface lands here first.
+"""
+
+from __future__ import annotations
+
+from ..core.engine import DEFAULT_TAU, DEFAULT_TOLERANCE, StorageEngine
+from .api import LoadHandle, SaveReport, SaveRequest, StoreStats
+from .errors import (
+    AdmissionRejectedError,
+    QuotaExceededError,
+    RemoteStoreError,
+)
+
+__all__ = [
+    "AdmissionRejectedError",
+    "DEFAULT_TAU",
+    "DEFAULT_TOLERANCE",
+    "LoadHandle",
+    "NeurStore",
+    "QuotaExceededError",
+    "RemoteStoreError",
+    "SaveReport",
+    "SaveRequest",
+    "StoreStats",
+]
+
+
+class NeurStore:
+    """Typed single-process front door over one on-disk store."""
+
+    def __init__(self, engine: StorageEngine):
+        self.engine = engine
+
+    @classmethod
+    def open(
+        cls,
+        path: str,
+        *,
+        tolerance: float = DEFAULT_TOLERANCE,
+        tau: float = DEFAULT_TAU,
+        cache_bytes: int = 32 << 30,
+        pool_bytes: int = 1 << 30,
+        checksums: bool = True,
+        auto_maintenance: bool = False,
+    ) -> "NeurStore":
+        """Open (or create) a store at ``path`` with the documented knobs.
+
+        ``tolerance``/``tau`` become the store-level defaults that
+        per-save overrides fall back to; ``cache_bytes`` bounds the HNSW
+        index cache, ``pool_bytes`` the tensor-page buffer pool.
+        """
+        return cls(StorageEngine(
+            path, tolerance=tolerance, tau=tau, cache_bytes=cache_bytes,
+            pool_bytes=pool_bytes, checksums=checksums,
+            auto_maintenance=auto_maintenance,
+        ))
+
+    # --------------------------------------------------------------- writes
+    def save(self, request: SaveRequest) -> SaveReport:
+        return self.engine.save_model(
+            request.name, request.architecture, request.tensors,
+            tolerance=request.tolerance, tau=request.tau,
+        )
+
+    def save_many(self, requests: list[SaveRequest]) -> list[SaveReport]:
+        """Commit several models in ONE catalog transaction (batch ingest).
+
+        Per-save knob overrides are not supported on the batch path (the
+        batch shares one probe/quantize sweep); all requests must leave
+        ``tolerance``/``tau`` unset.
+        """
+        for r in requests:
+            if r.tolerance is not None or r.tau is not None:
+                raise ValueError(
+                    f"save_many: request {r.name!r} carries per-save knob "
+                    "overrides; batch saves use the store defaults")
+        return self.engine.save_models(
+            [(r.name, r.architecture, r.tensors) for r in requests]
+        )
+
+    def replace(self, request: SaveRequest) -> SaveReport:
+        """Replace an existing model (KeyError if absent) atomically."""
+        return self.engine.replace_model(
+            request.name, request.architecture, request.tensors,
+            tolerance=request.tolerance, tau=request.tau,
+        )
+
+    def delete(self, name: str) -> None:
+        self.engine.delete_model(name)
+
+    def vacuum(self, min_dead_fraction: float = 0.0) -> dict:
+        return self.engine.vacuum(min_dead_fraction=min_dead_fraction)
+
+    # ---------------------------------------------------------------- reads
+    def load(self, name: str, *, bits: int | None = None,
+             shared_cache: bool = True) -> LoadHandle:
+        lm = self.engine.load_model(name, bits=bits, shared_cache=shared_cache)
+        return LoadHandle.from_loaded(name, lm, bits=bits)
+
+    def load_many(self, names: list[str],
+                  bits: int | None = None) -> list[LoadHandle]:
+        """Open several handles under ONE snapshot epoch (consistent set)."""
+        return [
+            LoadHandle.from_loaded(name, lm, bits=bits)
+            for name, lm in zip(names, self.engine.load_models(names, bits=bits))
+        ]
+
+    def models(self) -> list[str]:
+        return self.engine.list_models()
+
+    def stats(self) -> StoreStats:
+        return StoreStats.from_engine(self.engine.stats())
+
+    # ------------------------------------------------------------ lifecycle
+    def close(self) -> None:
+        self.engine.close()
+
+    def __enter__(self) -> "NeurStore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
