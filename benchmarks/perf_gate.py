@@ -24,7 +24,10 @@ The contract (docs/ingestion.md "CI perf-gate contract"):
 * ``BENCH_serving.json``: the HTTP front door must hold
   ``read_vs_embedded_ratio >= 0.5`` at 4 clients with zero 5xx responses
   and a finite p99 under writer churn (ISSUE 8 acceptance bar; the smoke
-  artifact is gated with the same invariants).
+  artifact is gated with the same invariants). Its ``obs`` section gates
+  the always-on observability layer (ISSUE 9): obs-on served QPS must
+  hold ``on_vs_off_ratio >= 0.95`` of obs-off, and the mid-churn
+  ``/v1/metrics`` scrape must have parsed cleanly (``scrape_ok``).
 
 Usage: ``python benchmarks/perf_gate.py BENCH_hnsw.json [BENCH_lifecycle.json]
 [BENCH_concurrency.json] [BENCH_serving.json]``. Exits non-zero with a
@@ -36,7 +39,7 @@ from __future__ import annotations
 import json
 import sys
 
-KNOWN_SCHEMAS = {2}
+KNOWN_SCHEMAS = {2, 3}  # serving bumped to 3 when the obs section landed
 MIN_BATCH_INGEST_SPEEDUP = 1.0
 MIN_BATCH_SAVE_SPEEDUP = 0.8
 MIN_CONCURRENT_READ_SPEEDUP = 1.0
@@ -44,6 +47,7 @@ MIN_CHECKSUM_RATIO = 0.9
 MIN_COMPRESSED_THROUGHPUT = 0.8
 MAX_COMPRESSED_BYTES_RATIO = 1.0  # strict: compressed must move FEWER bytes
 MIN_SERVED_READ_RATIO = 0.5  # served QPS vs embedded, 4 clients (ISSUE 8)
+MIN_OBS_ON_RATIO = 0.95  # obs-on served QPS vs obs-off (ISSUE 9)
 
 
 def check_file(path: str) -> list[str]:
@@ -170,6 +174,32 @@ def check_file(path: str) -> list[str]:
     elif "serving" in path:
         errors.append(f"{path}: no serving section — the HTTP front door "
                       "was not measured")
+    if "obs" in res:
+        ob = res["obs"]
+        oratio = ob["on_vs_off_ratio"]
+        obs_errors = []
+        if oratio < MIN_OBS_ON_RATIO:
+            obs_errors.append(
+                f"{path}: observability overhead too high — obs-on served "
+                f"QPS fell below {MIN_OBS_ON_RATIO}x obs-off "
+                f"(on_vs_off_ratio={oratio:.3f})")
+        if not ob.get("scrape_ok", False):
+            obs_errors.append(
+                f"{path}: /v1/metrics scrape failed or was malformed "
+                f"under load ({ob.get('on', {}).get('scrape_error', '?')})")
+        if ob.get("on", {}).get("errors_5xx", 0) != 0:
+            obs_errors.append(
+                f"{path}: {ob['on']['errors_5xx']} 5xx responses in the "
+                "obs-on phase (must be 0)")
+        if not obs_errors:
+            inc = ob.get("counter_inc", {})
+            print(f"{path}: obs-on {oratio:.3f}x obs-off ok "
+                  f"(counter inc {inc.get('enabled_ns', 0):.0f}ns, "
+                  f"scrape {ob.get('scrape_families', 0)} families)")
+        errors.extend(obs_errors)
+    elif "serving" in path and res.get("schema_version", 0) >= 3:
+        errors.append(f"{path}: no obs section — the observability "
+                      "overhead was not measured")
     return errors
 
 

@@ -19,6 +19,14 @@ policy's shed count. The acceptance bar (full-scale run recorded in
 zero 5xx, finite p99. The CI gate (``benchmarks/perf_gate.py``)
 enforces the same invariants on the smoke artifact.
 
+A third **obs** section prices the observability layer (ISSUE 9), which
+is on by default and must be ~free: the served phase is re-run with
+metrics+tracing enabled vs disabled (``on_vs_off_ratio`` gated ≥ 0.95),
+a microbench times one counter increment in each mode, and the obs-on
+server's ``/v1/metrics`` is scraped mid-churn and pushed through the
+strict Prometheus parser (``scrape_ok`` gated true — malformed
+exposition fails the bench, not just the consumer).
+
 Run: ``PYTHONPATH=src python benchmarks/serving_bench.py [--clients 4]``;
 ``--smoke`` runs the small CI scale. Or via the runner:
 ``PYTHONPATH=src python -m benchmarks.run serving [--smoke]``.
@@ -33,16 +41,22 @@ import os
 import tempfile
 import threading
 import time
+import urllib.request
 
 import numpy as np
 
 from repro.core.engine import StorageEngine
+from repro.obs.metrics import (
+    default_registry,
+    parse_prometheus_text,
+    set_enabled,
+)
 from repro.server import AdmissionPolicy, ModelStoreServer, StoreClient
 from repro.store import SaveRequest
 from repro.store.errors import AdmissionRejectedError
 
 # Bumped whenever the JSON layout changes (parsed by benchmarks/perf_gate.py).
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 TENANT = "bench"
 
@@ -156,33 +170,62 @@ def run_bench(n_models: int = 8, dim: int = 262144, n_clients: int = 4,
             engine.close()
             return res
 
-    def served_phase() -> dict:
-        with tempfile.TemporaryDirectory() as root:
-            engine = StorageEngine(root)
-            engine.save_models(
-                [(f"{TENANT}/{n}", a, t) for n, a, t in specs])
-            server = ModelStoreServer(
-                engine, admission=AdmissionPolicy()).start()
-            clients = [StoreClient(server.host, server.port, tenant=TENANT)
-                       for _ in range(n_clients)]
-            writer_client = StoreClient(server.host, server.port,
-                                        tenant=TENANT)
+    def served_phase(obs_enabled: bool = True,
+                     scrape: bool = False) -> dict:
+        set_enabled(obs_enabled)
+        try:
+            with tempfile.TemporaryDirectory() as root:
+                engine = StorageEngine(root)
+                engine.save_models(
+                    [(f"{TENANT}/{n}", a, t) for n, a, t in specs])
+                server = ModelStoreServer(
+                    engine, admission=AdmissionPolicy()).start()
+                clients = [StoreClient(server.host, server.port,
+                                       tenant=TENANT)
+                           for _ in range(n_clients)]
+                writer_client = StoreClient(server.host, server.port,
+                                            tenant=TENANT)
 
-            def read(slot, name):
-                clients[slot].load(name).materialize()
+                def read(slot, name):
+                    clients[slot].load(name).materialize()
 
-            def write(name, wrng):
-                writer_client.replace(SaveRequest(
-                    name, _churn_tensors(wrng, dim),
-                    architecture={"layer": name}))
+                def write(name, wrng):
+                    writer_client.replace(SaveRequest(
+                        name, _churn_tensors(wrng, dim),
+                        architecture={"layer": name}))
 
-            res = _run_phase(read, write, names, n_clients, duration_s,
-                             write_interval_s)
-            res["errors_5xx"] = server.server_stats()["errors_5xx"]
-            res["rejected_429"] = server.admission.stats()["rejected"]
-            server.stop()
-            engine.close()
-            return res
+                scrape_info = {}
+                if scrape:
+                    # Scrape mid-churn on a side thread so the exposition
+                    # is rendered under the same concurrent mutation the
+                    # gate cares about, not from a quiesced registry.
+                    def scraper():
+                        time.sleep(duration_s / 2)
+                        url = (f"http://{server.host}:{server.port}"
+                               "/v1/metrics")
+                        try:
+                            with urllib.request.urlopen(url) as resp:
+                                fams = parse_prometheus_text(
+                                    resp.read().decode("utf-8"))
+                            scrape_info["scrape_ok"] = True
+                            scrape_info["scrape_families"] = len(fams)
+                        except Exception as exc:  # noqa: BLE001 — gated
+                            scrape_info["scrape_ok"] = False
+                            scrape_info["scrape_error"] = repr(exc)
+                    st = threading.Thread(target=scraper)
+                    st.start()
+                res = _run_phase(read, write, names, n_clients, duration_s,
+                                 write_interval_s)
+                if scrape:
+                    st.join()
+                    res.update(scrape_info)
+                res["errors_5xx"] = server.server_stats()["errors_5xx"]
+                res["rejected_429"] = server.admission.stats()["rejected"]
+                server.stop()
+                engine.close()
+                return res
+        finally:
+            set_enabled(True)
 
     # Best-of-N per mode (same rationale as concurrency_bench: one
     # descheduled thread on a shared runner wedges a whole phase).
@@ -191,6 +234,17 @@ def run_bench(n_models: int = 8, dim: int = 262144, n_clients: int = 4,
     embedded = max(emb_reps, key=lambda r: r["qps"])
     served = max(srv_reps, key=lambda r: r["qps"])
     ratio = served["qps"] / embedded["qps"] if embedded["qps"] else 0.0
+
+    # Observability overhead: same served workload, obs on (with a
+    # mid-churn /v1/metrics scrape) vs off. Interleaved on/off reps so a
+    # runner slowdown mid-bench penalizes both modes equally.
+    on_reps, off_reps = [], []
+    for _ in range(reps):
+        on_reps.append(served_phase(obs_enabled=True, scrape=True))
+        off_reps.append(served_phase(obs_enabled=False))
+    obs_on = max(on_reps, key=lambda r: r["qps"])
+    obs_off = max(off_reps, key=lambda r: r["qps"])
+    obs_ratio = obs_on["qps"] / obs_off["qps"] if obs_off["qps"] else 0.0
 
     return {
         "schema_version": SCHEMA_VERSION,
@@ -213,7 +267,39 @@ def run_bench(n_models: int = 8, dim: int = 262144, n_clients: int = 4,
                 "served_qps": [r["qps"] for r in srv_reps],
             },
         },
+        "obs": {
+            "on": obs_on,
+            "off": obs_off,
+            "on_vs_off_ratio": obs_ratio,
+            "scrape_ok": bool(obs_on.get("scrape_ok", False)),
+            "scrape_families": obs_on.get("scrape_families", 0),
+            "counter_inc": _counter_microbench(),
+            "all_reps": {
+                "on_qps": [r["qps"] for r in on_reps],
+                "off_qps": [r["qps"] for r in off_reps],
+            },
+        },
     }
+
+
+def _counter_microbench(n: int = 200_000) -> dict:
+    """ns per counter increment, metrics enabled vs disabled.
+
+    Prices the primitive every hot-path instrumentation site pays; the
+    disabled number is what ``set_enabled(False)`` buys back.
+    """
+    c = default_registry().counter(
+        "neurstore_bench_counter_total",
+        "Bench-only counter (the microbench's scratch cell).")
+    out = {}
+    for mode, enabled in (("enabled", True), ("disabled", False)):
+        set_enabled(enabled)
+        t0 = time.perf_counter()
+        for _ in range(n):
+            c.inc()
+        out[f"{mode}_ns"] = (time.perf_counter() - t0) / n * 1e9
+    set_enabled(True)
+    return out
 
 
 def run(csv, smoke: bool = False):
@@ -261,6 +347,13 @@ def main():
           f"p50={s['p50_ms']:.1f}ms p99={s['p99_ms']:.1f}ms  "
           f"5xx={s['errors_5xx']} shed={s['rejected_429']}")
     print(f"served/embedded: {sv['read_vs_embedded_ratio']:.2f}x")
+    ob = res["obs"]
+    print(f"obs on/off: {ob['on']['qps']:.1f}/{ob['off']['qps']:.1f} qps "
+          f"({ob['on_vs_off_ratio']:.3f}x)  counter inc "
+          f"{ob['counter_inc']['enabled_ns']:.0f}ns on / "
+          f"{ob['counter_inc']['disabled_ns']:.0f}ns off  "
+          f"scrape_ok={ob['scrape_ok']} "
+          f"({ob['scrape_families']} families)")
     print(f"wrote {args.out}")
 
 

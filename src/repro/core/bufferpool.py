@@ -39,7 +39,44 @@ from __future__ import annotations
 import threading
 from collections import OrderedDict
 
+from ..obs.metrics import default_registry
+
 __all__ = ["BufferPool", "PageFrame"]
+
+# Process-wide pool metrics (docs/observability.md). Counters sum over
+# every pool in the process; the byte gauges attach per-pool weakly via
+# attach_gauges() (called by the owning engine) so a collected pool
+# drops out of the sum.
+_REG = default_registry()
+_M_HITS = _REG.counter(
+    "neurstore_pool_hits_total", "Buffer-pool frame hits."
+)
+_M_MISSES = _REG.counter(
+    "neurstore_pool_misses_total", "Buffer-pool frame misses (page loads)."
+)
+_M_EVICTIONS = _REG.counter(
+    "neurstore_pool_evictions_total", "Buffer-pool frames evicted."
+)
+_M_DECODED_HITS = _REG.counter(
+    "neurstore_pool_decoded_hits_total",
+    "Decoded-payload cache hits (shared dequant skipped).",
+)
+_M_DECODED_MISSES = _REG.counter(
+    "neurstore_pool_decoded_misses_total",
+    "Decoded-payload cache misses (payload unpacked).",
+)
+_M_RESIDENT = _REG.gauge(
+    "neurstore_pool_resident_bytes",
+    "Bytes resident in buffer pools, summed over open pools.",
+)
+_M_PINNED = _REG.gauge(
+    "neurstore_pool_pinned_bytes",
+    "Resident bytes pinned by live snapshots, summed over open pools.",
+)
+_M_BUDGET = _REG.gauge(
+    "neurstore_pool_budget_bytes",
+    "Buffer-pool byte budget, summed over open pools.",
+)
 
 
 class PageFrame:
@@ -90,6 +127,26 @@ class BufferPool:
         self.decoded_hits = 0
         self.decoded_misses = 0
 
+    def attach_gauges(self) -> None:
+        """Sum this pool's byte gauges into the process-wide registry.
+
+        Called by the owning engine (not __init__) so bare pools built by
+        unit tests don't pollute the process gauges. Idempotence is not
+        required — attach once per pool.
+        """
+        _M_RESIDENT.attach(self, lambda p: p._resident)
+        _M_PINNED.attach(self, lambda p: p.pinned_bytes())
+        _M_BUDGET.attach(self, lambda p: p.budget)
+
+    def count_decoded(self, hit: bool) -> None:
+        """Decoded-payload cache accounting (called by the loader)."""
+        if hit:
+            self.decoded_hits += 1
+            _M_DECODED_HITS.inc()
+        else:
+            self.decoded_misses += 1
+            _M_DECODED_MISSES.inc()
+
     # ------------------------------------------------------------------ get
     def get(self, key: str, loader) -> PageFrame:
         """Fetch the frame for ``key``, loading via ``loader()`` on a miss.
@@ -106,8 +163,10 @@ class BufferPool:
                 frame.pins += 1
                 self._frames.move_to_end(key)
                 self.hits += 1
+                _M_HITS.inc()
             else:
                 self.misses += 1
+                _M_MISSES.inc()
                 frame = PageFrame(key)
                 frame.pins = 1
                 self._frames[key] = frame
@@ -196,6 +255,7 @@ class BufferPool:
             del self._frames[victim.key]
             self._resident -= victim.nbytes
             self.evictions += 1
+            _M_EVICTIONS.inc()
 
     def trim(self, target_bytes: int | None = None) -> int:
         """Evict unpinned frames until resident bytes reach ``target_bytes``

@@ -66,7 +66,6 @@ from __future__ import annotations
 import dataclasses
 import os
 import threading
-import time
 from collections import Counter, OrderedDict, deque
 
 import numpy as np
@@ -110,6 +109,8 @@ from .quantize import (
     quantize_delta,
     quantize_linear_batch,
 )
+from ..obs.metrics import default_registry
+from ..obs.trace import trace
 
 __all__ = [
     "StorageEngine", "SaveReport", "DEFAULT_TOLERANCE", "DEFAULT_TAU",
@@ -125,6 +126,46 @@ DEFAULT_TAU = 0.16
 # docs/serving.md) are API — the serving admission policy and StoreStats
 # consume them — so layout changes must bump this.
 STATS_SCHEMA_VERSION = 1
+
+# Process-wide observability families (docs/observability.md is the
+# stability contract for these names). Counters sum over every engine
+# open in the process; gauges attach per-engine via weakref callbacks so
+# a closed/collected engine drops out of the sum.
+_REG = default_registry()
+_M_OPS = _REG.counter(
+    "neurstore_engine_ops_total",
+    "Completed engine operations by type.",
+    ("op",),
+)
+_M_OP_SECONDS = _REG.histogram(
+    "neurstore_engine_op_seconds",
+    "Engine operation wall time by type.",
+    ("op",),
+)
+_M_PAGE_READS = _REG.counter(
+    "neurstore_engine_page_reads_total",
+    "Page files read and verified (buffer-pool frame loads).",
+)
+_M_PAGE_READ_BYTES = _REG.counter(
+    "neurstore_engine_page_read_bytes_total",
+    "Bytes read from page files.",
+)
+_M_QUARANTINES = _REG.counter(
+    "neurstore_engine_quarantines_total",
+    "Models quarantined after failing an integrity check.",
+)
+_M_MODELS = _REG.gauge(
+    "neurstore_engine_models",
+    "Committed catalog entries, summed over open engines.",
+)
+_M_EPOCH = _REG.gauge(
+    "neurstore_engine_epoch",
+    "Snapshot-isolation epoch, summed over open engines.",
+)
+_M_SNAPSHOTS_LIVE = _REG.gauge(
+    "neurstore_engine_snapshots_live",
+    "Live reader snapshots, summed over open engines.",
+)
 
 # Save-probe regime switch (`_probe_dim_group`): brute-force the whole
 # (G, N) distance block while the index is small or the group is fat
@@ -452,6 +493,12 @@ class StorageEngine:
         self._lock = threading.RLock()
         self.maintenance = None
         self._recover()
+        # Gauge callbacks receive the engine weakly (no closure over
+        # self): an engine that goes away stops being summed.
+        _M_MODELS.attach(self, lambda e: len(e.catalog.state.models))
+        _M_EPOCH.attach(self, lambda e: e.catalog.state.epoch)
+        _M_SNAPSHOTS_LIVE.attach(self, lambda e: len(e._live_snapshots))
+        self.page_pool.attach_gauges()
         if auto_maintenance:
             self.start_maintenance()
 
@@ -856,7 +903,25 @@ class StorageEngine:
         written first, then the old page and its vertex references are
         dropped, all under one journal transaction.
         """
-        t0 = time.perf_counter()
+        with trace("engine.save", model=name) as op:
+            report = self._save_model_impl(
+                name, architecture, tensors, tolerance, tau, op
+            )
+        _M_OPS.labels("save").inc()
+        _M_OP_SECONDS.labels("save").observe(op.elapsed())
+        return report
+
+    def _save_model_impl(
+        self,
+        name: str,
+        architecture: dict,
+        tensors,
+        tolerance: float | None,
+        tau: float | None,
+        op,
+    ) -> SaveReport:
+        # `op` is the open engine.save span: SaveReport.seconds is derived
+        # from it, so wall time in the report and the trace cannot differ.
         self._check_writable()
         self._drain_released()
         p = self.tolerance if tolerance is None else tolerance
@@ -886,7 +951,7 @@ class StorageEngine:
             for dim in by_dim:
                 self.index_cache.pin(dim)
             try:
-                with self._lock:
+                with trace("probe", n_dims=len(by_dim)), self._lock:
                     for dim, positions in by_dim.items():
                         self._check_quarantine(dim)
                         index = self.index_cache.get(dim, create=True)
@@ -922,28 +987,31 @@ class StorageEngine:
             # order. Deltas are released as they are consumed.
             records: list[TensorRecord] = []
             nbits: list[int] = []
-            for i, (tname, shape, src) in enumerate(items):
-                vid, delta = bases[i]
-                bases[i] = None
-                qd, meta = quantize_delta(delta, p)
-                nbits.append(meta.nbit)
-                rec = TensorRecord(
-                    name=tname,
-                    shape=shape,
-                    dim_key=src.size,
-                    vertex_id=vid,
-                    meta=meta,
-                    qdelta=qd,
-                )
-                rec.payload = encode_payload(rec)
-                records.append(rec)
-            page = write_page(records, checksums=self.checksums)
+            with trace("quantize", n_tensors=len(items)):
+                for i, (tname, shape, src) in enumerate(items):
+                    vid, delta = bases[i]
+                    bases[i] = None
+                    qd, meta = quantize_delta(delta, p)
+                    nbits.append(meta.nbit)
+                    rec = TensorRecord(
+                        name=tname,
+                        shape=shape,
+                        dim_key=src.size,
+                        vertex_id=vid,
+                        meta=meta,
+                        qdelta=qd,
+                    )
+                    rec.payload = encode_payload(rec)
+                    records.append(rec)
+            with trace("pack"):
+                page = write_page(records, checksums=self.checksums)
 
             # Phase 3 (locked): the journaled commit. Intent → index flush
             # (vertices durable before the page references them) → page
             # write → atomic catalog snapshot (commit point) → old-version
-            # cleanup → journal commit.
-            with self._lock:
+            # cleanup → journal commit. The span opens before the lock so
+            # lock-wait time is attributed to the commit.
+            with trace("commit"), self._lock:
                 old = self.catalog.get(name)
                 old_refs = self._page_refs(old.page) if old else Counter()
                 if self.commit_gate is not None:
@@ -967,7 +1035,8 @@ class StorageEngine:
                     intent["old_refs"] = [
                         [d, v, c] for (d, v), c in old_refs.items()
                     ]
-                tx = self.catalog.begin(intent)
+                with trace("journal"):
+                    tx = self.catalog.begin(intent)
                 maybe_fail("save.after_intent")
                 self.index_cache.flush()
                 maybe_fail("save.after_index_flush")
@@ -1017,7 +1086,7 @@ class StorageEngine:
             n_new_bases=n_new,
             n_deltas=len(records) - n_new,
             nbits=nbits,
-            seconds=time.perf_counter() - t0,
+            seconds=op.elapsed(),
         )
 
     def save_models(
@@ -1047,7 +1116,13 @@ class StorageEngine:
         Returns one :class:`SaveReport` per model, in input order, with the
         batch wall time amortized evenly over the ``seconds`` fields.
         """
-        t0 = time.perf_counter()
+        with trace("engine.save_batch") as op:
+            reports = self._save_models_impl(models, tolerance, tau, op)
+        _M_OPS.labels("save_batch").inc()
+        _M_OP_SECONDS.labels("save_batch").observe(op.elapsed())
+        return reports
+
+    def _save_models_impl(self, models, tolerance, tau, op) -> list[SaveReport]:
         self._check_writable()
         p = self.tolerance if tolerance is None else tolerance
         tau_ = self.tau if tau is None else tau
@@ -1083,7 +1158,7 @@ class StorageEngine:
             for dim in by_dim:
                 self.index_cache.pin(dim)
             try:
-                with self._lock:
+                with trace("probe", n_dims=len(by_dim)), self._lock:
                     for dim, positions in by_dim.items():
                         self._check_quarantine(dim)
                         index = self.index_cache.get(dim, create=True)
@@ -1118,29 +1193,33 @@ class StorageEngine:
             # Phase 2 (unlocked): encode every model's page.
             pages: list[bytes] = []
             nbits_per_model: list[list[int]] = []
-            for mi, items in enumerate(all_items):
-                records: list[TensorRecord] = []
-                nbits: list[int] = []
-                for i, (tname, shape, src) in enumerate(items):
-                    vid, delta = bases[mi][i]
-                    bases[mi][i] = (vid, None)  # release the delta
-                    qd, meta = quantize_delta(delta, p)
-                    nbits.append(meta.nbit)
-                    rec = TensorRecord(
-                        name=tname,
-                        shape=shape,
-                        dim_key=src.size,
-                        vertex_id=vid,
-                        meta=meta,
-                        qdelta=qd,
-                    )
-                    rec.payload = encode_payload(rec)
-                    records.append(rec)
-                pages.append(write_page(records, checksums=self.checksums))
-                nbits_per_model.append(nbits)
+            with trace("quantize", n_models=len(all_items)):
+                for mi, items in enumerate(all_items):
+                    records: list[TensorRecord] = []
+                    nbits: list[int] = []
+                    for i, (tname, shape, src) in enumerate(items):
+                        vid, delta = bases[mi][i]
+                        bases[mi][i] = (vid, None)  # release the delta
+                        qd, meta = quantize_delta(delta, p)
+                        nbits.append(meta.nbit)
+                        rec = TensorRecord(
+                            name=tname,
+                            shape=shape,
+                            dim_key=src.size,
+                            vertex_id=vid,
+                            meta=meta,
+                            qdelta=qd,
+                        )
+                        rec.payload = encode_payload(rec)
+                        records.append(rec)
+                    with trace("pack"):
+                        pages.append(
+                            write_page(records, checksums=self.checksums)
+                        )
+                    nbits_per_model.append(nbits)
 
             # Phase 3 (locked): ONE journaled commit for the whole batch.
-            with self._lock:
+            with trace("commit"), self._lock:
                 olds = [self.catalog.get(n) for n in names]
                 old_refs = [
                     self._page_refs(o.page) if o else Counter() for o in olds
@@ -1170,11 +1249,12 @@ class StorageEngine:
                             [d, v, c] for (d, v), c in old_refs[mi].items()
                         ]
                     intent_models.append(m)
-                tx = self.catalog.begin({
-                    "op": "save_batch",
-                    "models": intent_models,
-                    "new_vertices": [[d, v] for d, v in new_vertices],
-                })
+                with trace("journal"):
+                    tx = self.catalog.begin({
+                        "op": "save_batch",
+                        "models": intent_models,
+                        "new_vertices": [[d, v] for d, v in new_vertices],
+                    })
                 maybe_fail("save_batch.after_intent")
                 self.index_cache.flush()
                 maybe_fail("save_batch.after_index_flush")
@@ -1220,7 +1300,7 @@ class StorageEngine:
                         self._inflight[pair] = left
                     else:
                         del self._inflight[pair]
-        per_model_s = (time.perf_counter() - t0) / len(specs)
+        per_model_s = op.elapsed() / len(specs)
         return [
             SaveReport(
                 model_id=model_ids[mi],
@@ -1246,7 +1326,7 @@ class StorageEngine:
         from whatever records still verify (see :meth:`_page_refs`)."""
         self._check_writable()
         self._drain_released()
-        with self._lock:
+        with trace("engine.delete", model=name) as op, self._lock:
             entry = self.catalog.get(name)
             if entry is None or entry.status not in (
                 STATUS_COMMITTED, STATUS_CORRUPT
@@ -1275,6 +1355,8 @@ class StorageEngine:
             self.page_pool.invalidate(entry.page)
             self._corrupt_reasons.pop(name, None)
             self.catalog.commit_tx(tx)
+        _M_OPS.labels("delete").inc()
+        _M_OP_SECONDS.labels("delete").observe(op.elapsed())
 
     def replace_model(
         self,
@@ -1289,10 +1371,13 @@ class StorageEngine:
         # Hold the (reentrant) lock across the save so a concurrent delete
         # cannot void the existence check and silently turn the replace
         # into a fresh save.
-        with self._lock:
+        with trace("engine.replace", model=name) as op, self._lock:
             if self.catalog.get(name) is None:
                 raise KeyError(name)
-            return self.save_model(name, architecture, tensors, tolerance, tau)
+            report = self.save_model(name, architecture, tensors, tolerance, tau)
+        _M_OPS.labels("replace").inc()
+        _M_OP_SECONDS.labels("replace").observe(op.elapsed())
+        return report
 
     def vacuum(self, min_dead_fraction: float = 0.0, dims=None) -> dict:
         """Compact indexes whose dead-vertex fraction is ≥ the threshold.
@@ -1325,7 +1410,7 @@ class StorageEngine:
             "vertices_dropped": 0,
             "pages_rewritten": 0,
         }
-        with self._lock:
+        with trace("engine.vacuum") as op, self._lock:
             corrupt = self.catalog.corrupt_names()
             if corrupt:
                 # Compaction renumbers vertex ids and rewrites page refs;
@@ -1393,6 +1478,8 @@ class StorageEngine:
                     self.index_cache.unpin(dim)
             self.index_cache.flush()
             self.index_cache.trim()
+        _M_OPS.labels("vacuum").inc()
+        _M_OP_SECONDS.labels("vacuum").observe(op.elapsed())
         return report
 
     def _vacuum_dim(
@@ -1514,9 +1601,14 @@ class StorageEngine:
         Verification happens here, at frame *admission*: every reader of a
         cached frame shares one CRC pass instead of re-verifying per load.
         """
-        data = self.fs.read_bytes(self._page_file(page_name), site="page.read")
-        if self.checksums:
-            verify_page(data)
+        with trace("page.io", page=page_name):
+            data = self.fs.read_bytes(
+                self._page_file(page_name), site="page.read"
+            )
+            if self.checksums:
+                verify_page(data)
+        _M_PAGE_READS.inc()
+        _M_PAGE_READ_BYTES.inc(len(data))
         return data
 
     def _quarantine_model(
@@ -1541,6 +1633,7 @@ class StorageEngine:
             entry.status = STATUS_CORRUPT
             self._corrupt_reasons[name] = reason
             self.page_pool.invalidate(page_name)
+            _M_QUARANTINES.inc()
             if persist and not self.read_only:
                 try:
                     self.catalog.save_snapshot()
@@ -1612,11 +1705,19 @@ class StorageEngine:
         — the pre-concurrency behaviour; the concurrency benchmark uses it
         as the serialized baseline).
         """
+        with trace("engine.load", model=name) as op:
+            lm = self._load_model_impl(name, bits, shared_cache)
+        _M_OPS.labels("load").inc()
+        _M_OP_SECONDS.labels("load").observe(op.elapsed())
+        return lm
+
+    def _load_model_impl(self, name: str, bits: int | None,
+                         shared_cache: bool):
         from .loader import LoadedModel, ModelSnapshot
 
         self._drain_released()
         for _attempt in range(64):
-            with self._lock:
+            with trace("probe"), self._lock:
                 entry = self.catalog.get(name)
                 if entry is None or entry.status != STATUS_COMMITTED:
                     if entry is not None and entry.status == STATUS_CORRUPT:
@@ -1629,14 +1730,18 @@ class StorageEngine:
             # are consistent with whatever entry we re-validate below.
             frame = None
             try:
-                if shared_cache:
-                    frame = self.page_pool.get(
-                        page_name, lambda: self._read_page_bytes(page_name)
-                    )
-                    page = self._parse_frame(frame)
-                else:
-                    page = read_page_header(self._read_page_bytes(page_name))
-                dims = page_dim_keys(page)
+                with trace("pool", page=page_name):
+                    if shared_cache:
+                        frame = self.page_pool.get(
+                            page_name,
+                            lambda: self._read_page_bytes(page_name),
+                        )
+                        page = self._parse_frame(frame)
+                    else:
+                        page = read_page_header(
+                            self._read_page_bytes(page_name)
+                        )
+                    dims = page_dim_keys(page)
             except FileNotFoundError as exc:
                 # Raced a delete/replace/vacuum: re-read the entry. A frame
                 # returned by get() cannot be the raiser (its bytes loaded),
@@ -1666,7 +1771,7 @@ class StorageEngine:
                     self.page_pool.unpin(frame)  # corrupt page: no pin leak
                 raise
             try:
-                with self._lock:
+                with trace("snapshot"), self._lock:
                     cur = self.catalog.get(name)
                     if cur is not None and cur.status == STATUS_CORRUPT:
                         raise self._corrupt_error(name)
@@ -1735,11 +1840,17 @@ class StorageEngine:
         :func:`repro.core.loader.materialize_many` to reconstruct with
         each base shared *across* handles de-quantized once.
         """
-        from .loader import LoadedModel, ModelSnapshot
-
         names = list(names)
         if not names:
             return []
+        with trace("engine.load_batch", n_models=len(names)) as op:
+            handles = self._load_models_impl(names, bits)
+        _M_OPS.labels("load_batch").inc()
+        _M_OP_SECONDS.labels("load_batch").observe(op.elapsed())
+        return handles
+
+    def _load_models_impl(self, names: list, bits: int | None) -> list:
+        from .loader import LoadedModel, ModelSnapshot
         self._drain_released()
         for _attempt in range(64):
             # Phase 1 (no lock held across I/O): resolve each name to its

@@ -90,8 +90,29 @@ import pickle
 import numpy as np
 
 from .quantize import QuantMeta, quantize_linear, quantize_linear_batch
+from ..obs.metrics import default_registry
 
 __all__ = ["HNSWIndex", "quantized_l2_batch", "KERNEL_DISPATCH_MIN_ELEMS"]
+
+# Process-wide HNSW counters (docs/observability.md), summed over every
+# index in the process. Increments are batched (one .inc(n) per distance
+# call / per search) so the hot loops pay one counter bump, not one per
+# vertex.
+_REG = default_registry()
+_M_DIST_EVALS = _REG.counter(
+    "neurstore_hnsw_distance_evals_total",
+    "Vertex distance evaluations (rows of decomposed quantized-L2).",
+)
+_M_VISITED = _REG.counter(
+    "neurstore_hnsw_visited_total",
+    "Vertices visited during layer searches.",
+)
+_M_SEARCHES = _REG.counter(
+    "neurstore_hnsw_searches_total", "Graph k-NN searches."
+)
+_M_INSERTS = _REG.counter(
+    "neurstore_hnsw_inserts_total", "Vertices inserted."
+)
 
 _EMPTY_IDS = np.empty(0, dtype=np.int64)
 
@@ -289,6 +310,7 @@ class HNSWIndex:
         squared norm and element sum.
         """
         idx = np.asarray(ids, dtype=np.int64)
+        _M_DIST_EVALS.inc(idx.size)
         dot = self._codes[idx].astype(np.float32) @ q32
         s = self._scales[idx]
         dist = (qsq + self._norms[idx]) + 2.0 * (qsum * self._cross[idx] - s * dot)
@@ -306,6 +328,7 @@ class HNSWIndex:
         q2 = np.atleast_2d(np.asarray(queries, dtype=np.float64))
         if n == 0:
             return np.zeros((q2.shape[0], 0), dtype=np.float64)
+        _M_DIST_EVALS.inc(q2.shape[0] * n)
         if n * self.dim >= KERNEL_DISPATCH_MIN_ELEMS:
             out = _offload_distances(
                 q2, self._codes[:n], self._scales[:n], self._zps[:n],
@@ -396,6 +419,7 @@ class HNSWIndex:
         dead = self._deleted
         entry_ids = np.asarray(entry, dtype=np.int64)
         visited[entry_ids] = epoch
+        n_visited = entry_ids.size
         dists = (
             drow[entry_ids] if drow is not None
             else self._distances(q32, qsq, qsum, entry_ids)
@@ -421,6 +445,7 @@ class HNSWIndex:
             if fresh.size == 0:
                 continue
             visited[fresh] = epoch
+            n_visited += fresh.size
             if drow is not None:
                 # Batched-ingest fast path: lookup + vectorized bound filter.
                 # The filter uses the bound at expansion start, so it admits
@@ -450,6 +475,7 @@ class HNSWIndex:
                         if len(best) > ef:
                             heapq.heappop(best)
                         bound = -best[0][0]
+        _M_VISITED.inc(n_visited)
         return sorted((-nd, int(v)) for nd, v in best)
 
     def search(
@@ -465,6 +491,7 @@ class HNSWIndex:
         the descent); pass ``exclude_deleted=False`` to search the raw
         graph. Returns ``[]`` when every reachable vertex is dead.
         """
+        _M_SEARCHES.inc()
         if self._entry is None:
             return []
         ef = max(ef or self.ef_construction, k)
@@ -507,6 +534,7 @@ class HNSWIndex:
             -meta.mid if meta.scale == 0.0 else meta.scale * meta.zero_point
         )
         self._n = vid + 1
+        _M_INSERTS.inc()
         level = self._draw_level()
         self._register_level(vid, level)
 
@@ -731,6 +759,7 @@ class HNSWIndex:
         else:
             codes, scales, zps, mids = quantized
         n0 = self._n
+        _M_INSERTS.inc(b)
         self._grow(n0 + b)
         self._codes[n0:n0 + b] = codes
         self._scales[n0:n0 + b] = scales

@@ -187,11 +187,11 @@ class LoadedModel:
                 if arr is None:
                     frame.decoded[key] = arr = fresh
                     inserted = True
-            self.engine.page_pool.decoded_misses += 1
+            self.engine.page_pool.count_decoded(hit=False)
             if inserted:
                 self.engine.page_pool.note_extra(frame, arr.nbytes)
         else:
-            self.engine.page_pool.decoded_hits += 1
+            self.engine.page_pool.count_decoded(hit=True)
         rec.qdelta = arr
         return rec
 

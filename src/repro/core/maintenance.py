@@ -37,8 +37,50 @@ restarts the loop rather than leaving a dead thread that looks alive from
 from __future__ import annotations
 
 import threading
+import time
+
+from ..obs.metrics import default_registry
+from ..obs.trace import trace
 
 __all__ = ["MaintenanceDaemon"]
+
+# Process-wide maintenance metrics (docs/observability.md), summed over
+# every daemon in the process.
+_REG = default_registry()
+_M_STEPS = _REG.counter(
+    "neurstore_maintenance_steps_total", "Completed maintenance steps."
+)
+_M_VACUUMED = _REG.counter(
+    "neurstore_maintenance_vacuumed_vertices_total",
+    "Dead vertices reclaimed by auto-vacuum.",
+)
+_M_TRIMMED = _REG.counter(
+    "neurstore_maintenance_pool_bytes_trimmed_total",
+    "Buffer-pool bytes evicted by pressure trims.",
+)
+_M_SCRUBBED = _REG.counter(
+    "neurstore_maintenance_pages_scrubbed_total",
+    "Pages checksum-verified by the scrubber.",
+)
+_M_CORRUPT = _REG.counter(
+    "neurstore_maintenance_corrupt_found_total",
+    "Corrupt pages found (and quarantined) by the scrubber.",
+)
+_M_ERRORS = _REG.counter(
+    "neurstore_maintenance_errors_total", "Maintenance steps that raised."
+)
+_M_RESTARTS = _REG.counter(
+    "neurstore_maintenance_restarts_total",
+    "Supervisor restarts of an escaped maintenance loop.",
+)
+_M_CONSEC = _REG.gauge(
+    "neurstore_maintenance_consecutive_errors",
+    "Consecutive failed steps, summed over running daemons.",
+)
+_M_ERR_AGE = _REG.gauge(
+    "neurstore_maintenance_last_error_age_seconds",
+    "Seconds since the most recent step error (0 when none yet).",
+)
 
 
 class MaintenanceDaemon:
@@ -71,13 +113,29 @@ class MaintenanceDaemon:
         self.corrupt_found = 0
         self.errors = 0
         self.last_error: str | None = None
+        self.last_error_at: float | None = None  # time.monotonic() stamp
         self.restarts = 0
         self.consecutive_errors = 0
+        _M_CONSEC.attach(self, lambda d: d.consecutive_errors)
+        _M_ERR_AGE.attach(self, lambda d: d.last_error_age_s() or 0.0)
 
     # ------------------------------------------------------------- stepping
+    def _note_error(self, exc: BaseException) -> None:
+        self.errors += 1
+        self.consecutive_errors += 1
+        self.last_error = repr(exc)
+        self.last_error_at = time.monotonic()
+        _M_ERRORS.inc()
+
+    def last_error_age_s(self) -> float | None:
+        """Seconds since the most recent step error; None when none yet."""
+        if self.last_error_at is None:
+            return None
+        return time.monotonic() - self.last_error_at
+
     def step(self) -> dict:
         """One deterministic maintenance increment (see module docstring)."""
-        with self._lock:
+        with trace("maintenance.step"), self._lock:
             report = {
                 "dim_checked": None,
                 "vertices_dropped": 0,
@@ -103,20 +161,25 @@ class MaintenanceDaemon:
                 report["pages_rewritten"] = rep["pages_rewritten"]
                 self.vacuumed_vertices += rep["vertices_dropped"]
                 self.pages_rewritten += rep["pages_rewritten"]
+                _M_VACUUMED.inc(rep["vertices_dropped"])
             if self.scrub_models > 0:
                 srep = engine.scrub(self.scrub_models)
                 report["pages_scrubbed"] = srep["scanned"]
                 report["scrub_corrupt"] = srep["corrupt"]
                 self.pages_scrubbed += srep["scanned"]
                 self.corrupt_found += len(srep["corrupt"])
+                _M_SCRUBBED.inc(srep["scanned"])
+                _M_CORRUPT.inc(len(srep["corrupt"]))
             pool = engine.page_pool
             target = int(pool.budget * self.pool_high_watermark)
             if pool.resident_bytes() > target:
                 trimmed = pool.trim(target)
                 report["pool_bytes_trimmed"] = trimmed
                 self.pool_bytes_trimmed += trimmed
+                _M_TRIMMED.inc(trimmed)
             engine.index_cache.trim()
             self.steps += 1
+            _M_STEPS.inc()
             return report
 
     # ------------------------------------------------------------ lifecycle
@@ -156,9 +219,7 @@ class MaintenanceDaemon:
                 self.step()
                 self.consecutive_errors = 0
             except Exception as exc:  # counted, never fatal to the daemon
-                self.errors += 1
-                self.consecutive_errors += 1
-                self.last_error = repr(exc)
+                self._note_error(exc)
 
     def _supervise(self) -> None:
         """Restart ``_run`` if it ever escapes — a maintenance thread that
@@ -167,12 +228,11 @@ class MaintenanceDaemon:
             try:
                 self._run()
             except BaseException as exc:
-                self.errors += 1
-                self.consecutive_errors += 1
-                self.last_error = repr(exc)
+                self._note_error(exc)
                 if self._stop.is_set():
                     return
                 self.restarts += 1
+                _M_RESTARTS.inc()
                 self._stop.wait(self._backoff_s())
 
     # ---------------------------------------------------------------- stats
@@ -187,6 +247,7 @@ class MaintenanceDaemon:
             "corrupt_found": self.corrupt_found,
             "errors": self.errors,
             "last_error": self.last_error,
+            "last_error_age_s": self.last_error_age_s(),
             "restarts": self.restarts,
             "consecutive_errors": self.consecutive_errors,
             "backoff_s": self._backoff_s(),

@@ -30,10 +30,17 @@ from __future__ import annotations
 
 import dataclasses
 
+from ..obs.metrics import default_registry
 from ..store.api import StoreStats
 from ..store.errors import AdmissionRejectedError
 
 __all__ = ["AdmissionPolicy"]
+
+_M_REJECTED = default_registry().counter(
+    "neurstore_server_admission_rejects_total",
+    "Writes shed by the admission policy, by trigger.",
+    ("reason",),
+)
 
 
 @dataclasses.dataclass
@@ -61,6 +68,7 @@ class AdmissionPolicy:
         util = stats.pool_utilization
         if 0 <= self.max_pool_utilization < util:
             self.rejected += 1
+            _M_REJECTED.labels("pool_utilization").inc()
             raise AdmissionRejectedError(
                 f"buffer pool at {util:.0%} of budget "
                 f"(> {self.max_pool_utilization:.0%}); retry after "
@@ -68,6 +76,7 @@ class AdmissionPolicy:
         lag = stats.epoch_lag
         if 0 <= self.max_epoch_lag < lag:
             self.rejected += 1
+            _M_REJECTED.labels("epoch_lag").inc()
             raise AdmissionRejectedError(
                 f"oldest live snapshot is {lag} commits behind "
                 f"(> {self.max_epoch_lag}); retry after "

@@ -34,10 +34,14 @@ from __future__ import annotations
 
 import json
 import threading
+import time
 from collections import OrderedDict
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from urllib.parse import parse_qs, unquote, urlsplit
 
+from ..core.engine import STATS_SCHEMA_VERSION
+from ..obs.metrics import default_registry
+from ..obs.trace import parse_traceparent, trace
 from ..store.api import SaveRequest, StoreStats
 from ..store.errors import error_payload
 from . import wire
@@ -47,6 +51,45 @@ from .quota import QuotaManager, tenant_model_name, validate_tenant
 __all__ = ["ModelStoreServer"]
 
 _WRITE_METHODS = frozenset({"POST", "PUT", "DELETE"})
+
+# Process-wide server metrics (docs/observability.md). Route labels are
+# fixed templates assigned at dispatch — never raw paths — so label
+# cardinality is bounded by the route table.
+_REG = default_registry()
+_M_REQUESTS = _REG.counter(
+    "neurstore_server_requests_total",
+    "HTTP requests by route template, method and status class.",
+    ("route", "method", "status"),
+)
+_M_REQ_SECONDS = _REG.histogram(
+    "neurstore_server_request_seconds",
+    "HTTP request wall time by route template.",
+    ("route",),
+)
+_M_INFLIGHT = _REG.gauge(
+    "neurstore_server_inflight_requests",
+    "HTTP requests currently being handled.",
+)
+_M_RC_HITS = _REG.counter(
+    "neurstore_server_response_cache_hits_total",
+    "Response-cache hits (download served as one send).",
+)
+_M_RC_MISSES = _REG.counter(
+    "neurstore_server_response_cache_misses_total",
+    "Response-cache misses (download reconstructed from the store).",
+)
+_M_RC_ADMITTED = _REG.counter(
+    "neurstore_server_response_cache_admissions_total",
+    "Encoded downloads admitted to the response cache.",
+)
+_M_RC_BYPASSED = _REG.counter(
+    "neurstore_server_response_cache_bypasses_total",
+    "Encoded downloads refused admission (larger than max_entry_bytes).",
+)
+_M_RC_EVICTED = _REG.counter(
+    "neurstore_server_response_cache_evictions_total",
+    "Response-cache entries evicted by the byte budget.",
+)
 
 
 class _ResponseSent(Exception):
@@ -127,35 +170,56 @@ class _ResponseCache:
     snapshot, no reconstruction, no re-CRC.
     """
 
-    def __init__(self, budget_bytes: int):
+    def __init__(self, budget_bytes: int, max_entry_bytes: int | None = None):
         self.budget = budget_bytes
+        # Admission policy for very large models: an entry above this
+        # threshold bypasses the cache instead of wiping it. Default:
+        # a single entry may use at most half the budget, so at least
+        # two hot models can stay resident. The bypass is *counted*
+        # (admissions/bypasses/evictions below and in the registry), so
+        # the policy is visible instead of silent.
+        if max_entry_bytes is None:
+            max_entry_bytes = budget_bytes // 2
+        self.max_entry_bytes = int(max_entry_bytes)
         self._entries: "OrderedDict[tuple, bytes]" = OrderedDict()
         self._bytes = 0
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
+        self.admissions = 0
+        self.bypasses = 0
+        self.evictions = 0
 
     def get(self, key: tuple) -> bytes | None:
         with self._lock:
             blob = self._entries.get(key)
             if blob is None:
                 self.misses += 1
+                _M_RC_MISSES.inc()
                 return None
             self._entries.move_to_end(key)
             self.hits += 1
+            _M_RC_HITS.inc()
             return blob
 
     def put(self, key: tuple, blob: bytes) -> None:
-        if len(blob) > self.budget:
-            return  # one oversized entry must not wipe the whole cache
+        if len(blob) > self.max_entry_bytes:
+            with self._lock:
+                self.bypasses += 1
+            _M_RC_BYPASSED.inc()
+            return
         with self._lock:
             if key in self._entries:
                 return
             self._entries[key] = blob
             self._bytes += len(blob)
+            self.admissions += 1
+            _M_RC_ADMITTED.inc()
             while self._bytes > self.budget and self._entries:
                 _, old = self._entries.popitem(last=False)
                 self._bytes -= len(old)
+                self.evictions += 1
+                _M_RC_EVICTED.inc()
 
     def stats(self) -> dict:
         with self._lock:
@@ -163,8 +227,12 @@ class _ResponseCache:
                 "entries": len(self._entries),
                 "bytes": self._bytes,
                 "budget_bytes": self.budget,
+                "max_entry_bytes": self.max_entry_bytes,
                 "hits": self.hits,
                 "misses": self.misses,
+                "admissions": self.admissions,
+                "bypasses": self.bypasses,
+                "evictions": self.evictions,
             }
 
 
@@ -184,6 +252,12 @@ class _Handler(BaseHTTPRequestHandler):
 
     def log_message(self, fmt, *args):  # quiet by default; ctx counts
         pass
+
+    def send_response(self, code, message=None):
+        # Remember the status for the per-route metrics in _route()
+        # (BaseHTTPRequestHandler has no other hook for it).
+        self._last_status = code
+        super().send_response(code, message)
 
     # ------------------------------------------------------------ plumbing
     def _send_json(self, status: int, obj: dict, headers: dict | None = None):
@@ -245,8 +319,34 @@ class _Handler(BaseHTTPRequestHandler):
         self._route("DELETE")
 
     def _route(self, method: str) -> None:
+        """Metrics/tracing envelope around the actual dispatch.
+
+        The request span adopts a client-supplied ``traceparent`` (W3C
+        format), so engine spans opened on this handler thread hang off
+        the caller's trace id. Per-route counters use fixed route
+        templates (``self._route_label``, assigned at dispatch) and the
+        status class of the *first* response line sent.
+        """
         ctx = self.ctx
         ctx.count("requests")
+        parent = parse_traceparent(self.headers.get("traceparent") or "")
+        self._route_label = "unknown"
+        self._last_status = 0
+        span = trace("http.request", parent=parent, method=method,
+                     path=self.path)
+        _M_INFLIGHT.inc()
+        try:
+            with span:
+                self._dispatch(method)
+        finally:
+            _M_INFLIGHT.dec()
+            status = f"{self._last_status // 100}xx" if self._last_status \
+                else "aborted"
+            _M_REQUESTS.labels(self._route_label, method, status).inc()
+            _M_REQ_SECONDS.labels(self._route_label).observe(span.elapsed())
+
+    def _dispatch(self, method: str) -> None:
+        ctx = self.ctx
         url = urlsplit(self.path)
         query = parse_qs(url.query)
         parts = [unquote(p) for p in url.path.strip("/").split("/")]
@@ -255,12 +355,19 @@ class _Handler(BaseHTTPRequestHandler):
                 raise KeyError(url.path)
             rest = parts[1:]
             if rest == ["healthz"] and method == "GET":
-                self._send_json(200, {"ok": True})
+                self._route_label = "healthz"
+                self._healthz()
                 return
             if rest == ["stats"] and method == "GET":
+                self._route_label = "stats"
                 self._get_stats()
                 return
+            if rest == ["metrics"] and method == "GET":
+                self._route_label = "metrics"
+                self._get_metrics()
+                return
             if rest == ["admin", "vacuum"] and method == "POST":
+                self._route_label = "admin.vacuum"
                 body = self._read_json_body()
                 report = ctx.engine.vacuum(
                     min_dead_fraction=float(body.get("min_dead_fraction", 0.0))
@@ -270,9 +377,11 @@ class _Handler(BaseHTTPRequestHandler):
             if len(rest) >= 3 and rest[0] == "tenants":
                 tenant = validate_tenant(rest[1])
                 if rest[2:] == ["models"] and method == "GET":
+                    self._route_label = "tenant.models"
                     self._list_models(tenant)
                     return
                 if rest[2:] == ["quota"] and method == "GET":
+                    self._route_label = "tenant.quota"
                     self._send_json(
                         200, ctx.quotas.report(ctx.engine, tenant))
                     return
@@ -283,14 +392,21 @@ class _Handler(BaseHTTPRequestHandler):
                             StoreStats.from_engine(ctx.engine.stats()))
                     if method == "GET":
                         if query.get("info"):
+                            self._route_label = "model.info"
                             self._model_info(tenant, name)
                         else:
+                            self._route_label = "model.download"
                             self._download(tenant, name, query)
                         return
                     if method in ("POST", "PUT"):
+                        self._route_label = (
+                            "model.replace" if method == "PUT"
+                            else "model.upload"
+                        )
                         self._upload(tenant, name, replace=(method == "PUT"))
                         return
                     if method == "DELETE":
+                        self._route_label = "model.delete"
                         ctx.engine.delete_model(
                             tenant_model_name(tenant, name))
                         self._send_json(200, {"deleted": name})
@@ -307,6 +423,38 @@ class _Handler(BaseHTTPRequestHandler):
                 self.close_connection = True
 
     # ------------------------------------------------------------ handlers
+    def _healthz(self) -> None:
+        """Liveness plus the facts a probe needs to page on: schema
+        version, uptime, degraded-mode flag, maintenance-daemon health."""
+        ctx = self.ctx
+        engine = ctx.engine
+        daemon = engine.maintenance
+        maint = {"running": False, "consecutive_errors": 0,
+                 "last_error_age_s": None}
+        if daemon is not None:
+            maint = {
+                "running": daemon.running,
+                "consecutive_errors": daemon.consecutive_errors,
+                "last_error_age_s": daemon.last_error_age_s(),
+            }
+        self._send_json(200, {
+            "ok": True,
+            "stats_schema_version": STATS_SCHEMA_VERSION,
+            "uptime_s": time.monotonic() - ctx.started_at,
+            "read_only": engine.read_only,
+            "maintenance": maint,
+        })
+
+    def _get_metrics(self) -> None:
+        """Prometheus text exposition of the process-wide registry."""
+        body = default_registry().render().encode("utf-8")
+        self.send_response(200)
+        self.send_header(
+            "Content-Type", "text/plain; version=0.0.4; charset=utf-8")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
     def _get_stats(self) -> None:
         stats = StoreStats.from_engine(self.ctx.engine.stats())
         out = stats.to_dict()
@@ -393,9 +541,12 @@ class _Handler(BaseHTTPRequestHandler):
             }
             frames: list[bytes] = []
             self._send_stream_headers()
-            self._stream_body(
-                wire.encode_model_stream(header, lm.iter_tensors()),
-                collect=frames)
+            # The span covers dequant + wire encode + socket writes — the
+            # part of a cold download the response cache saves on a hit.
+            with trace("decode", model=name, n_tensors=header["n_tensors"]):
+                self._stream_body(
+                    wire.encode_model_stream(header, lm.iter_tensors()),
+                    collect=frames)
             if frames:
                 cache.put((lm.info["id"], bits), b"".join(frames))
         finally:
@@ -460,13 +611,18 @@ class ModelStoreServer:
         quotas: QuotaManager | None = None,
         admission: AdmissionPolicy | None = None,
         response_cache_bytes: int = 256 << 20,
+        response_cache_max_entry_bytes: int | None = None,
     ):
         self.engine = engine
         self.quotas = quotas if quotas is not None else QuotaManager()
         self.admission = admission if admission is not None else AdmissionPolicy()
+        self.started_at = time.monotonic()
         # Hot downloads skip reconstruction entirely (keyed by immutable
         # model version, so replaces invalidate by key drift).
-        self.response_cache = _ResponseCache(response_cache_bytes)
+        self.response_cache = _ResponseCache(
+            response_cache_bytes,
+            max_entry_bytes=response_cache_max_entry_bytes,
+        )
         self.httpd = ThreadingHTTPServer((host, port), _Handler)
         self.httpd.daemon_threads = True
         self.httpd.ctx = self  # type: ignore[attr-defined]

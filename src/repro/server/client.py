@@ -30,6 +30,7 @@ import socket
 import threading
 from urllib.parse import quote
 
+from ..obs.trace import trace
 from ..store.api import LoadHandle, SaveReport, SaveRequest, StoreStats
 from ..store.errors import RemoteStoreError, raise_for_code
 from . import wire
@@ -107,35 +108,44 @@ class StoreClient:
         ``body`` may be a callable returning a fresh bytes-iterator so a
         chunked upload can be replayed on retry (a plain generator would
         be half-exhausted after the first attempt).
+
+        Every request carries a W3C ``traceparent`` header, so the
+        server's ``http.request`` span (and the engine spans under it)
+        joins this client's trace — nested under the caller's span when
+        one is active on this thread, a fresh trace otherwise.
         """
-        for attempt in (0, 1):
-            conn = self._conn()
-            try:
-                payload = body() if callable(body) else body
+        with trace("client.request", method=method, path=path) as span:
+            headers = {"traceparent": span.traceparent()}
+            for attempt in (0, 1):
+                conn = self._conn()
                 try:
-                    if chunked:
-                        conn.request(method, path, body=payload,
-                                     headers={"Transfer-Encoding": "chunked"},
-                                     encode_chunked=True)
-                    else:
-                        conn.request(method, path, body=payload)
-                except (BrokenPipeError, ConnectionResetError):
-                    # The server can reject an upload EARLY (e.g. 429
-                    # backpressure) and stop reading mid-body; the error
-                    # response is already waiting on the socket — read
-                    # it instead of surfacing the pipe failure.
-                    early = self._read_early_response(conn)
-                    if early is not None:
-                        return early
+                    payload = body() if callable(body) else body
+                    try:
+                        if chunked:
+                            headers["Transfer-Encoding"] = "chunked"
+                            conn.request(method, path, body=payload,
+                                         headers=headers,
+                                         encode_chunked=True)
+                        else:
+                            conn.request(method, path, body=payload,
+                                         headers=headers)
+                    except (BrokenPipeError, ConnectionResetError):
+                        # The server can reject an upload EARLY (e.g. 429
+                        # backpressure) and stop reading mid-body; the
+                        # error response is already waiting on the socket
+                        # — read it instead of surfacing the pipe failure.
+                        early = self._read_early_response(conn)
+                        if early is not None:
+                            return early
+                        raise
+                    return conn.getresponse()
+                except _RETRYABLE:
+                    self._drop_conn()
+                    if attempt:
+                        raise
+                except OSError:
+                    self._drop_conn()
                     raise
-                return conn.getresponse()
-            except _RETRYABLE:
-                self._drop_conn()
-                if attempt:
-                    raise
-            except OSError:
-                self._drop_conn()
-                raise
         raise AssertionError("unreachable")
 
     def _read_early_response(self, conn):

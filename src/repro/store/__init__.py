@@ -136,6 +136,23 @@ class NeurStore:
     def stats(self) -> StoreStats:
         return StoreStats.from_engine(self.engine.stats())
 
+    # --------------------------------------------------------- observability
+    def metrics(self) -> dict:
+        """Parsed snapshot of the process-wide metrics registry.
+
+        Returns ``{family_name: {"type": ..., "help": ..., "samples":
+        [{"name", "labels", "value"}, ...]}}`` — the same structure
+        :func:`repro.obs.metrics.parse_prometheus_text` produces, so
+        embedded callers and scrape consumers see one schema.
+        """
+        from ..obs.metrics import default_registry, parse_prometheus_text
+        return parse_prometheus_text(default_registry().render())
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition (what ``GET /v1/metrics`` serves)."""
+        from ..obs.metrics import default_registry
+        return default_registry().render()
+
     # ------------------------------------------------------------ lifecycle
     def close(self) -> None:
         self.engine.close()

@@ -421,3 +421,105 @@ def test_healthz_and_vacuum_admin(served):
     c.delete("m")
     report = c.vacuum()
     assert "vertices_dropped" in report
+
+
+# ----------------------------------------------------------- response cache
+def test_response_cache_admission_knob(tmp_path):
+    """Oversized downloads bypass the cache instead of wiping it, and the
+    policy is visible in stats (admissions/bypasses/evictions)."""
+    from repro.server.app import _ResponseCache
+
+    cache = _ResponseCache(budget_bytes=1000)  # default max_entry = 500
+    assert cache.max_entry_bytes == 500
+    cache.put(("big", None), b"x" * 501)  # refused, counted
+    assert cache.get(("big", None)) is None
+    cache.put(("a", None), b"x" * 400)
+    cache.put(("b", None), b"y" * 400)
+    assert cache.get(("a", None)) is not None
+    cache.put(("c", None), b"z" * 400)  # budget forces an eviction
+    st = cache.stats()
+    assert st["bypasses"] == 1
+    assert st["admissions"] == 3
+    assert st["evictions"] >= 1
+    assert st["max_entry_bytes"] == 500
+    assert st["bytes"] <= st["budget_bytes"]
+
+
+def test_response_cache_max_entry_passthrough(tmp_path):
+    engine = StorageEngine(str(tmp_path))
+    server = ModelStoreServer(
+        engine, response_cache_bytes=1 << 20,
+        response_cache_max_entry_bytes=64,  # every real model bypasses
+    ).start()
+    try:
+        c = _client(server)
+        c.save(SaveRequest("m", _tensors(seed=30)))
+        for _ in range(2):
+            c.load("m").close()
+        st = server.response_cache.stats()
+        assert st["max_entry_bytes"] == 64
+        assert st["bypasses"] >= 1 and st["admissions"] == 0
+        assert st["hits"] == 0  # nothing was ever admitted
+        c.close()
+    finally:
+        server.stop()
+        engine.close()
+
+
+def test_healthz_shape_is_enriched(served):
+    """/v1/healthz is a contract: schema version, uptime, degraded flag,
+    maintenance health — not just a liveness bit."""
+    import json as _json
+    import urllib.request
+
+    _, server = served
+    url = f"http://{server.host}:{server.port}/v1/healthz"
+    with urllib.request.urlopen(url) as resp:
+        body = _json.loads(resp.read())
+    assert set(body) == {
+        "ok", "stats_schema_version", "uptime_s", "read_only", "maintenance"}
+    assert set(body["maintenance"]) == {
+        "running", "consecutive_errors", "last_error_age_s"}
+    assert body["stats_schema_version"] == STATS_SCHEMA_VERSION
+
+
+def test_metrics_route_serves_prometheus_text(served):
+    import urllib.request
+
+    from repro.obs.metrics import parse_prometheus_text
+
+    _, server = served
+    c = _client(server)
+    c.save(SaveRequest("m", _tensors(seed=31)))
+    c.load("m").close()
+    url = f"http://{server.host}:{server.port}/v1/metrics"
+    with urllib.request.urlopen(url) as resp:
+        assert resp.status == 200
+        assert resp.headers["Content-Type"].startswith("text/plain")
+        fams = parse_prometheus_text(resp.read().decode("utf-8"))
+    # One family from every instrumented subsystem answers the scrape.
+    for name in ("neurstore_engine_ops_total", "neurstore_pool_hits_total",
+                 "neurstore_hnsw_searches_total",
+                 "neurstore_maintenance_steps_total",
+                 "neurstore_server_requests_total"):
+        assert name in fams, name
+    c.close()
+
+
+def test_unknown_route_counts_as_4xx_not_5xx(served):
+    from repro.obs.metrics import default_registry
+
+    _, server = served
+
+    def val():
+        return default_registry().sample_value(
+            "neurstore_server_requests_total",
+            {"route": "unknown", "method": "GET", "status": "4xx"}) or 0.0
+
+    before = val()
+    c = _client(server)
+    with pytest.raises(Exception):
+        c._json("GET", "/v1/nope")
+    assert val() == before + 1
+    assert server.server_stats()["errors_5xx"] == 0
+    c.close()
