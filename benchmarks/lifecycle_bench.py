@@ -15,7 +15,11 @@ subsystem:
 * **batched ingest** — the same model set saved through ONE
   ``save_models`` transaction (one journal intent, one ``meta.json``
   commit, cross-model dim grouping) vs the per-model ``save_model`` loop —
-  the checkpoint-sweep amortization of ISSUE 3.
+  the checkpoint-sweep amortization of ISSUE 3;
+* **space accounting** — the same ingest with the incremental
+  ``SpaceAccountant`` on vs off (pricing the always-on ledger), plus the
+  store-wide compression ratio it reports — the paper's Fig. 9 number as
+  a continuously-published artifact (ISSUE 10).
 
 Writes ``BENCH_lifecycle.json`` at the repo root (``schema_version``
 documents the layout the CI gate parses) and prints the usual
@@ -40,7 +44,8 @@ from repro.core.engine import StorageEngine
 from repro.core.loader import materialize_many
 
 # Bumped whenever the JSON layout changes (parsed by benchmarks/perf_gate.py).
-SCHEMA_VERSION = 2
+# 3: added the "accounting" section (compression ratio + ledger overhead).
+SCHEMA_VERSION = 3
 
 
 def _models(n: int, dim: int, rng: np.random.Generator):
@@ -99,6 +104,70 @@ def _bench_batch_save(models: dict, dim: int, sequential_s: float) -> dict:
     }
 
 
+def _bench_accounting(seed: int = 0, trials: int = 15) -> dict:
+    """Price the incremental space ledger: same ingest, accounting on/off.
+
+    Runs at its own fixed scale (8 models, dim 2048) regardless of
+    ``--smoke``: the ledger's cost is O(tensors) per save, so the gate
+    statistic should not swing with the bench's model size.
+
+    Save wall time is fsync-dominated and jitters by ±30% per pass on a
+    shared box — far more than the ledger costs — so pooled per-mode
+    aggregates (even medians over many passes) sporadically skew the
+    ratio past any reasonable gate. Instead, one accounting-on and one
+    accounting-off engine ingest the same models with their *individual
+    saves interleaved*: each save runs in both engines back-to-back
+    (milliseconds apart, alternating which goes first), so both sides of
+    a pair share the disk's mood, and the per-pair off/on ratio isolates
+    the ledger cost. The gate ratio is the median over all
+    ``trials × n_models`` pair ratios (~120 pairs, ~1s total). The
+    compression ratio comes from the accounting-on store — it is the
+    number ``GET /v1/accounting`` and ``StoreStats.compression_ratio``
+    publish in production.
+    """
+    rng = np.random.default_rng(seed)
+    keep, drop = _models(8, 2048, rng)
+    models = {**keep, **drop}
+
+    def median(xs: list[float]) -> float:
+        xs = sorted(xs)
+        return xs[len(xs) // 2]
+
+    on_stats: dict = {}
+    per: dict[bool, list[list[float]]] = {True: [], False: []}
+    ratios: list[float] = []
+    for trial in range(trials):
+        with tempfile.TemporaryDirectory() as root_off, \
+                tempfile.TemporaryDirectory() as root_on:
+            engs = {False: StorageEngine(root_off, accounting=False),
+                    True: StorageEngine(root_on, accounting=True)}
+            took: dict[bool, list[float]] = {True: [], False: []}
+            for i, (name, tensors) in enumerate(models.items()):
+                order = ((False, True) if (trial + i) % 2 == 0
+                         else (True, False))
+                pair = {}
+                for mode in order:
+                    pair[mode] = engs[mode].save_model(
+                        name, {}, tensors).seconds
+                    took[mode].append(pair[mode])
+                ratios.append(pair[False] / pair[True])
+            for mode in (False, True):
+                per[mode].append(sum(took[mode]))
+            on_stats = engs[True].stats()["accounting"]
+
+    return {
+        "n_models": len(models),
+        "on_save_s": median(per[True]),
+        "off_save_s": median(per[False]),
+        # Throughput ratio, accounting-on vs off (>= 1.0 means free):
+        # median over per-save interleaved off/on pair ratios.
+        "on_vs_off_ratio": median(ratios),
+        "logical_bytes": on_stats["logical_bytes"],
+        "physical_bytes": on_stats["physical_bytes"],
+        "compression_ratio": on_stats["compression_ratio"],
+    }
+
+
 def run_bench(n: int = 16, dim: int = 4096, seed: int = 0,
               smoke: bool = False) -> dict:
     rng = np.random.default_rng(seed)
@@ -133,6 +202,7 @@ def run_bench(n: int = 16, dim: int = 4096, seed: int = 0,
         parity &= sorted(eng2.list_models()) == sorted(keep)
 
     batch_save = _bench_batch_save({**keep, **drop}, dim, sum(save_s))
+    accounting = _bench_accounting(seed=seed)
 
     return {
         "schema_version": SCHEMA_VERSION,
@@ -160,6 +230,7 @@ def run_bench(n: int = 16, dim: int = 4096, seed: int = 0,
         },
         "post_vacuum_load_parity": bool(parity),
         "reopen_s": reopen_s,
+        "accounting": accounting,
     }
 
 
@@ -179,6 +250,11 @@ def run(csv, smoke: bool = False):
             f"parity={res['post_vacuum_load_parity']}")
     csv.add("lifecycle/save_models", bs["seconds"] / bs["n_models"] * 1e6,
             f"speedup_vs_sequential={bs['speedup_vs_sequential']:.2f}x")
+    ac = res["accounting"]
+    csv.add("lifecycle/accounting_on_save",
+            ac["on_save_s"] / ac["n_models"] * 1e6,
+            f"on_vs_off={ac['on_vs_off_ratio']:.3f},"
+            f"ratio={ac['compression_ratio']:.3f}")
 
 
 def main():
@@ -211,6 +287,10 @@ def main():
           f"{b['reclaimed_index']}, total {b['reclaimed_total']} "
           f"({b['before']['total']} -> {b['after_vacuum']['total']})")
     print(f"post-vacuum load parity: {res['post_vacuum_load_parity']}")
+    ac = res["accounting"]
+    print(f"accounting: on {ac['on_vs_off_ratio']:.3f}x off, "
+          f"compression ratio {ac['compression_ratio']:.3f} "
+          f"({ac['physical_bytes']} / {ac['logical_bytes']} bytes)")
     print(f"wrote {args.out}")
 
 

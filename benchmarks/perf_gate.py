@@ -14,7 +14,12 @@ The contract (docs/ingestion.md "CI perf-gate contract"):
 * ``BENCH_lifecycle.json``: ``batch_save.reconstruction_parity`` must be
   true, and the one-transaction batch save must not be drastically slower
   than the per-model loop (``speedup_vs_sequential >= 0.8`` — fsync timing
-  on shared runners jitters, so only a clear loss fails);
+  on shared runners jitters, so only a clear loss fails). Its
+  ``accounting`` section (schema >= 3, ISSUE 10) gates the always-on
+  space ledger: accounting-on save throughput must hold
+  ``on_vs_off_ratio >= 0.95`` of accounting-off, and the reported
+  store-wide ``compression_ratio`` must be < 1.0 (the store actually
+  compresses — the paper's headline claim);
 * ``BENCH_concurrency.json``: snapshot-isolated concurrent readers must
   not lose to the global-lock serialized baseline measured in the same
   run — ``concurrent_read.speedup_vs_serialized >= 1.0``. Coarse on
@@ -48,6 +53,8 @@ MIN_COMPRESSED_THROUGHPUT = 0.8
 MAX_COMPRESSED_BYTES_RATIO = 1.0  # strict: compressed must move FEWER bytes
 MIN_SERVED_READ_RATIO = 0.5  # served QPS vs embedded, 4 clients (ISSUE 8)
 MIN_OBS_ON_RATIO = 0.95  # obs-on served QPS vs obs-off (ISSUE 9)
+MIN_ACCOUNTING_ON_RATIO = 0.95  # accounting-on save vs off (ISSUE 10)
+MAX_COMPRESSION_RATIO = 1.0  # strict: the store must actually compress
 
 
 def check_file(path: str) -> list[str]:
@@ -200,6 +207,31 @@ def check_file(path: str) -> list[str]:
     elif "serving" in path and res.get("schema_version", 0) >= 3:
         errors.append(f"{path}: no obs section — the observability "
                       "overhead was not measured")
+    if "accounting" in res:
+        ac = res["accounting"]
+        aratio = ac["on_vs_off_ratio"]
+        cratio = ac.get("compression_ratio")
+        acct_errors = []
+        if aratio < MIN_ACCOUNTING_ON_RATIO:
+            acct_errors.append(
+                f"{path}: space-accounting overhead too high — "
+                f"accounting-on save throughput fell below "
+                f"{MIN_ACCOUNTING_ON_RATIO}x accounting-off "
+                f"(on_vs_off_ratio={aratio:.3f})")
+        if cratio is None or cratio >= MAX_COMPRESSION_RATIO:
+            acct_errors.append(
+                f"{path}: store did not compress — reported "
+                f"compression_ratio={cratio!r} must be < "
+                f"{MAX_COMPRESSION_RATIO}")
+        if not acct_errors:
+            print(f"{path}: accounting-on {aratio:.3f}x off ok, "
+                  f"compression ratio {cratio:.3f} "
+                  f"({ac.get('physical_bytes', '?')} physical / "
+                  f"{ac.get('logical_bytes', '?')} logical bytes)")
+        errors.extend(acct_errors)
+    elif "lifecycle" in path and res.get("schema_version", 0) >= 3:
+        errors.append(f"{path}: no accounting section — the space ledger "
+                      "was not measured")
     return errors
 
 

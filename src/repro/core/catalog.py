@@ -88,8 +88,11 @@ from .integrity import (
 __all__ = [
     "Catalog",
     "CatalogState",
+    "EXPLAIN_FIELDS",
     "InjectedCrash",
     "ModelEntry",
+    "explain_pack",
+    "explain_unpack",
     "STATUS_COMMITTED",
     "STATUS_PENDING",
     "STATUS_CORRUPT",
@@ -115,6 +118,32 @@ def maybe_fail(point: str) -> None:
         raise InjectedCrash(point)
 
 
+# Persisted EXPLAIN row layout (the engine's per-model sidecar files —
+# deliberately NOT part of meta.json, whose snapshot is re-serialized
+# and fsynced at every commit and must not grow with EXPLAIN). Entries
+# are stored as fixed-order rows (no repeated keys) with floats trimmed
+# to 6 significant digits — about 3x smaller/faster to dump than the
+# verbose per-tensor dicts the engine hands out.
+EXPLAIN_FIELDS = (
+    "tensor", "dim", "vertex_id", "outcome", "probe_distance",
+    "delta_range", "tau", "nbit", "delta_bytes", "error_bound",
+)
+
+
+def _trim(v):
+    return float(f"{v:.6g}") if isinstance(v, float) else v
+
+
+def explain_pack(entries: list) -> list:
+    return [[_trim(e.get(k)) for k in EXPLAIN_FIELDS] for e in entries]
+
+
+def explain_unpack(rows) -> list | None:
+    if rows is None:
+        return None
+    return [dict(zip(EXPLAIN_FIELDS, row)) for row in rows]
+
+
 # ------------------------------------------------------------- typed records
 @dataclasses.dataclass
 class ModelEntry:
@@ -127,6 +156,15 @@ class ModelEntry:
     n_tensors: int
     original_bytes: int
     status: str = STATUS_COMMITTED
+    # Bounded per-tensor save EXPLAIN (first EXPLAIN_PERSIST_MAX tensors,
+    # see engine.py): how each tensor was stored — matched vertex, probe
+    # distance vs tau, dedup outcome, delta bit-width/bytes. In-memory
+    # only: the durable copy lives in the engine's per-model sidecar
+    # file (explain/model_<id>.json), never in the snapshot — meta.json
+    # is rewritten+fsynced per commit and must stay O(models), not
+    # O(models × tensors). None when accounting is disabled and on
+    # entries loaded from disk until the sidecar is read.
+    explain: list | None = None
 
     def __getitem__(self, key: str):
         # Legacy dict-style access ("id", "page", ...) for pre-catalog callers.
@@ -135,7 +173,7 @@ class ModelEntry:
         return getattr(self, key)
 
     def to_dict(self) -> dict:
-        return {
+        out = {
             "id": self.model_id,
             "architecture": self.architecture,
             "page": self.page,
@@ -143,6 +181,7 @@ class ModelEntry:
             "original_bytes": self.original_bytes,
             "status": self.status,
         }
+        return out
 
     @classmethod
     def from_dict(cls, name: str, d: dict) -> "ModelEntry":

@@ -64,6 +64,7 @@ see ``docs/concurrency.md``):
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 import threading
 from collections import Counter, OrderedDict, deque
@@ -77,6 +78,8 @@ from .catalog import (
     STATUS_PENDING,
     Catalog,
     ModelEntry,
+    explain_pack,
+    explain_unpack,
     maybe_fail,
 )
 from .faultfs import FaultFS
@@ -109,6 +112,7 @@ from .quantize import (
     quantize_delta,
     quantize_linear_batch,
 )
+from ..obs.accounting import ModelSpace, SpaceAccountant, TensorSpace
 from ..obs.metrics import default_registry
 from ..obs.trace import trace
 
@@ -166,6 +170,25 @@ _M_SNAPSHOTS_LIVE = _REG.gauge(
     "neurstore_engine_snapshots_live",
     "Live reader snapshots, summed over open engines.",
 )
+_M_DEDUP_OUTCOMES = _REG.counter(
+    "neurstore_dedup_outcomes_total",
+    "Save-time dedup decision per stored tensor "
+    "(new_base / delta / intra_save_dedup).",
+    ("outcome",),
+)
+_M_DELTA_BITS = _REG.histogram(
+    "neurstore_delta_bits",
+    "Adaptive delta-quantization bit-width chosen per stored tensor.",
+    buckets=tuple(range(0, 33)),  # nbit is an integer in [0, MAX_NBIT]
+)
+_M_LOGICAL_BYTES = _REG.gauge(
+    "neurstore_logical_bytes",
+    "Uncompressed float32 bytes of committed models, summed over engines.",
+)
+_M_PHYSICAL_BYTES = _REG.gauge(
+    "neurstore_physical_bytes",
+    "Physical bytes (pages + shared base codes), summed over engines.",
+)
 
 # Save-probe regime switch (`_probe_dim_group`): brute-force the whole
 # (G, N) distance block while the index is small or the group is fat
@@ -174,6 +197,21 @@ _M_SNAPSHOTS_LIVE = _REG.gauge(
 # ef·m·levels ≈ 512 candidate rows, hence the group factor.
 BRUTE_PROBE_MAX_INDEX = 4096
 BRUTE_PROBE_GROUP_FACTOR = 512
+
+# A save's per-tensor EXPLAIN is persisted for the first this-many
+# tensors only (the full list always rides the SaveReport). It lives in
+# a per-model sidecar file (explain/model_<id>.json), written behind the
+# save path and never fsynced: folding it into meta.json would make
+# EVERY later commit's snapshot serialize+fsync pay for it, and even one
+# extra file create per save is visible in the lifecycle benchmark's
+# accounting gate — EXPLAIN is advisory, so losing a queued sidecar in a
+# crash only degrades model_explain(), never correctness.
+EXPLAIN_PERSIST_MAX = 256
+
+# Pending EXPLAIN sidecars are flushed to disk once this many saves have
+# queued (and always at close()/vacuum()): bounds queue memory while
+# keeping the amortized save-path cost at 1/EXPLAIN_FLUSH_MAX writes.
+EXPLAIN_FLUSH_MAX = 128
 
 # Dim groups are probed in chunks of at most this many float64 elements
 # (~64 MB for the stacked block), so a save's peak memory stays bounded by
@@ -196,6 +234,12 @@ class SaveReport:
     n_deltas: int
     nbits: list[int]
     seconds: float
+    # Per-tensor EXPLAIN, in tensor order: how Algorithm 1 stored each
+    # tensor — {"tensor", "dim", "vertex_id", "outcome", "probe_distance"
+    # (squared L2 of the ANN match, None if the index was empty),
+    # "delta_range" (the quantity SHOULDCOMPRESS compares), "tau",
+    # "nbit", "delta_bytes", "error_bound"}. See docs/observability.md.
+    explain: list | None = None
 
     @property
     def mean_nbit(self) -> float:
@@ -435,10 +479,12 @@ class StorageEngine:
         auto_maintenance: bool = False,
         fs: FaultFS | None = None,
         checksums: bool = True,
+        accounting: bool = True,
     ):
         self.root = root
         os.makedirs(os.path.join(root, "pages"), exist_ok=True)
         os.makedirs(os.path.join(root, "index"), exist_ok=True)
+        os.makedirs(os.path.join(root, "explain"), exist_ok=True)
         self.tolerance = tolerance
         self.tau = tau
         self.ef_search = ef_search
@@ -448,6 +494,21 @@ class StorageEngine:
         # verify (the durability benchmark's baseline mode).
         self.fs = fs if fs is not None else FaultFS()
         self.checksums = checksums
+        # Incremental space accounting (docs/observability.md): the
+        # ledger is updated at every commit point and reseeded by a full
+        # rescan at open and after vacuum (which renumbers vertex ids).
+        # accounting=False skips ledger maintenance and catalog EXPLAIN
+        # persistence (SaveReport.explain is still produced) — the
+        # lifecycle benchmark prices the difference.
+        self.accounting = accounting
+        self._accountant = SpaceAccountant()
+        # Write-behind queue for EXPLAIN sidecars: model_id → bounded
+        # explain slice, flushed to explain/model_<id>.json on close(),
+        # vacuum(), or when EXPLAIN_FLUSH_MAX saves are pending. The
+        # sidecar is advisory, so deferring it keeps its (measurable)
+        # file-create cost out of the save path entirely; a crash loses
+        # at most the queued tail, never ledger or model state.
+        self._pending_explains: dict[int, list] = {}
         # Degraded read-only mode: set when the journal body or meta.json
         # is corrupt — serving the last good state is safe, mutating on
         # top of it is not.
@@ -493,11 +554,17 @@ class StorageEngine:
         self._lock = threading.RLock()
         self.maintenance = None
         self._recover()
+        if self.accounting:
+            self._accountant.reset(self._scan_model_spaces())
         # Gauge callbacks receive the engine weakly (no closure over
         # self): an engine that goes away stops being summed.
         _M_MODELS.attach(self, lambda e: len(e.catalog.state.models))
         _M_EPOCH.attach(self, lambda e: e.catalog.state.epoch)
         _M_SNAPSHOTS_LIVE.attach(self, lambda e: len(e._live_snapshots))
+        _M_LOGICAL_BYTES.attach(
+            self, lambda e: e._accountant.totals(e.catalog.ref_count)[0])
+        _M_PHYSICAL_BYTES.attach(
+            self, lambda e: e._accountant.totals(e.catalog.ref_count)[1])
         self.page_pool.attach_gauges()
         if auto_maintenance:
             self.start_maintenance()
@@ -525,6 +592,50 @@ class StorageEngine:
 
     def _page_path(self, model_id: int) -> str:
         return self._page_file(f"model_{model_id}.page")
+
+    def _explain_file(self, model_id: int) -> str:
+        return os.path.join(self.root, "explain", f"model_{model_id}.json")
+
+    def _write_explain_sidecar(self, model_id: int, explain: list) -> None:
+        """Persist the bounded EXPLAIN slice beside the catalog (packed
+        rows, see ``catalog.EXPLAIN_FIELDS``). One plain write, no fsync
+        — EXPLAIN is advisory, and an injected/real I/O error must never
+        fail the already-committed save it annotates."""
+        rows = explain_pack(explain[:EXPLAIN_PERSIST_MAX])
+        data = json.dumps(rows).encode("utf-8")
+        try:
+            with self.fs.open(
+                self._explain_file(model_id), "wb", site="explain.write"
+            ) as f:
+                f.write(data)
+        except OSError:
+            pass
+
+    def flush_explains(self) -> int:
+        """Drain the EXPLAIN write-behind queue to sidecar files.
+
+        Runs automatically at close(), vacuum(), and every
+        EXPLAIN_FLUSH_MAX queued saves; callers that need sidecars on
+        disk *now* (e.g. before handing the store directory to another
+        process) may invoke it directly. Returns the number flushed."""
+        with self._lock:
+            pending, self._pending_explains = self._pending_explains, {}
+        for model_id, explain in pending.items():
+            self._write_explain_sidecar(model_id, explain)
+        return len(pending)
+
+    def _load_explain_sidecar(self, model_id: int) -> list | None:
+        """Read a model's persisted EXPLAIN rows back into dict form.
+        None when absent/unreadable (pre-EXPLAIN stores, accounting-off
+        saves, or a crash that outran the advisory write)."""
+        try:
+            rows = json.loads(self.fs.read_bytes(
+                self._explain_file(model_id), site="explain.read"))
+            if not isinstance(rows, list):
+                return None
+            return explain_unpack(rows)
+        except (OSError, ValueError, TypeError):
+            return None
 
     def _page_size(self, entry: ModelEntry | None) -> int:
         """On-disk bytes of an entry's page (0 when absent/unreadable)."""
@@ -657,7 +768,10 @@ class StorageEngine:
     def _sweep_orphan_pages(self) -> None:
         """Unlink page files no committed entry references (post-replay the
         journal is empty, so anything unreferenced is dead weight: garbage
-        from torn writes, or ``.vac`` side files a rollback left behind)."""
+        from torn writes, or ``.vac`` side files a rollback left behind).
+        EXPLAIN sidecars of dead model ids go the same way — theirs is the
+        one gap the unlink-on-delete protocol can leave (a crash between a
+        delete's commit point and its cleanup)."""
         pages_dir = os.path.join(self.root, "pages")
         referenced = {
             self.catalog.state.models[n].page for n in self.catalog.state.models
@@ -669,6 +783,14 @@ class StorageEngine:
                 fname.startswith("model_") and fname.endswith(".page")
             ):
                 self._unlink(os.path.join(pages_dir, fname))
+        live_ids = {
+            f"model_{self.catalog.state.models[n].model_id}.json"
+            for n in self.catalog.state.models
+        }
+        explain_dir = os.path.join(self.root, "explain")
+        for fname in os.listdir(explain_dir):
+            if fname not in live_ids:
+                self._unlink(os.path.join(explain_dir, fname))
 
     def _drop_pending_entries(self) -> bool:
         """Defensive sweep: a snapshot should never hold non-committed
@@ -796,7 +918,7 @@ class StorageEngine:
 
     def _probe_dim_group(
         self, index: HNSWIndex, flats: np.ndarray, tau_: float
-    ) -> tuple[list[tuple[int, np.ndarray]], list[int]]:
+    ) -> tuple[list[tuple[int, np.ndarray]], list[int], list[dict]]:
         """Batched Algorithm 1 lines 2–3 for one dim group (engine lock held).
 
         ``flats`` is the (G, dim) float64 block of every tensor in the
@@ -810,14 +932,19 @@ class StorageEngine:
         similar to a base created moments earlier in the same save becomes
         a delta, not a second base), and inserted via ``insert_batch``.
 
-        Returns ``(bases, new_vids)``: ``bases[j] = (vertex_id, delta)``
-        in group order, ``new_vids`` the vertex ids created. Callers bound
-        ``flats`` to ``PROBE_CHUNK_ELEMS`` (see ``_iter_group_chunks``);
-        the intermediates here are all O(chunk).
+        Returns ``(bases, new_vids, explains)``: ``bases[j] =
+        (vertex_id, delta)`` in group order, ``new_vids`` the vertex ids
+        created, and ``explains[j]`` the per-tensor EXPLAIN skeleton —
+        ``{"vertex_id", "outcome", "probe_distance", "delta_range"}`` —
+        that the quantize phase completes. Callers bound ``flats`` to
+        ``PROBE_CHUNK_ELEMS`` (see ``_iter_group_chunks``); the
+        intermediates here are all O(chunk).
         """
         g = flats.shape[0]
         bases: list = [None] * g
+        explains: list = [None] * g
         best_vid = np.full(g, -1, dtype=np.int64)
+        best_dist = np.full(g, np.inf)
         if len(index):
             # Small index or fat group: one exact (G, N) distance block
             # beats G graph descents. Large index with a thin group: keep
@@ -828,28 +955,38 @@ class StorageEngine:
                 len(index) <= BRUTE_PROBE_MAX_INDEX
                 or g * BRUTE_PROBE_GROUP_FACTOR >= len(index)
             ):
-                best_vid, _ = index.nearest_live_batch(flats)
+                best_vid, best_dist = index.nearest_live_batch(flats)
             else:
                 for j in range(g):
                     hit = index.search(flats[j], k=1, ef=self.ef_search)
                     if hit:
-                        best_vid[j] = hit[0][1]
+                        best_dist[j], best_vid[j] = hit[0]
         deq_cache: dict[int, np.ndarray] = {}
         cand_pos: list[int] = []
         for j in range(g):
             vid = int(best_vid[j])
+            dist = (
+                float(best_dist[j])
+                if vid >= 0 and np.isfinite(best_dist[j]) else None
+            )
             if vid >= 0:
                 base = deq_cache.get(vid)
                 if base is None:
                     base = deq_cache[vid] = index.dequantize_vertex(vid)
                 delta = flats[j] - base
+                rng = float(delta.max() - delta.min())
                 # SHOULDCOMPRESS: delta range vs tau (§4.2).
-                if float(delta.max() - delta.min()) <= tau_:
+                if rng <= tau_:
                     bases[j] = (vid, delta)
+                    explains[j] = {
+                        "vertex_id": vid, "outcome": "delta",
+                        "probe_distance": dist, "delta_range": rng,
+                    }
                     continue
             cand_pos.append(j)
+            explains[j] = {"probe_distance": dist}  # completed below
         if not cand_pos:
-            return bases, []
+            return bases, [], explains
         cand = flats[cand_pos]
         qc, qs, qz, qm = quantize_linear_batch(cand, nbit=8)
         deq = dequantize_linear_batch(qc, qs, qz, qm)
@@ -862,14 +999,22 @@ class StorageEngine:
                 diff = acc_mat[: len(accepted)] - flat
                 k = int(np.argmin(np.einsum("ad,ad->a", diff, diff)))
                 delta = flat - acc_mat[k]
-                if float(delta.max() - delta.min()) <= tau_:
+                rng = float(delta.max() - delta.min())
+                if rng <= tau_:
                     bases[j] = (k, delta)  # k resolved to a vid below
                     batch_refs.append(j)
+                    explains[j].update(
+                        outcome="intra_save_dedup", delta_range=rng)
                     continue
             acc_mat[len(accepted)] = deq[local_j]
-            bases[j] = (len(accepted), flats[j] - deq[local_j])
+            delta = flats[j] - deq[local_j]
+            bases[j] = (len(accepted), delta)
             batch_refs.append(j)
             accepted.append(local_j)
+            explains[j].update(
+                outcome="new_base",
+                delta_range=float(delta.max() - delta.min()),
+            )
         sel = np.asarray(accepted, dtype=np.int64)
         vids = index.insert_batch(
             cand[sel], quantized=(qc[sel], qs[sel], qz[sel], qm[sel])
@@ -877,7 +1022,31 @@ class StorageEngine:
         for j in batch_refs:
             k, delta = bases[j]
             bases[j] = (vids[k], delta)
-        return bases, vids
+            explains[j]["vertex_id"] = int(vids[k])
+        return bases, vids, explains
+
+    def _account_committed_save(
+        self, name: str, model_id: int, page_name: str, page_bytes: int,
+        logical_bytes: int, tensors: tuple, explain: list,
+    ) -> None:
+        """Post-commit bookkeeping for one saved model: push the space
+        facts into the ledger (replace-by-name covers ``replace_model``),
+        persist the EXPLAIN sidecar, and publish the dedup-outcome /
+        bit-width metric families."""
+        if self.accounting:
+            self._accountant.record_save(ModelSpace(
+                name=name,
+                page=page_name,
+                page_bytes=page_bytes,
+                logical_bytes=logical_bytes,
+                tensors=tensors,
+            ))
+            self._pending_explains[model_id] = explain[:EXPLAIN_PERSIST_MAX]
+            if len(self._pending_explains) >= EXPLAIN_FLUSH_MAX:
+                self.flush_explains()
+        for ex in explain:
+            _M_DEDUP_OUTCOMES.labels(ex["outcome"]).inc()
+            _M_DELTA_BITS.observe(ex["nbit"])
 
     def save_model(
         self,
@@ -944,6 +1113,7 @@ class StorageEngine:
         # float64 upcast now lives per *group* (the batch paths need the
         # (G, dim) block), released as each group resolves.
         bases: list[tuple[int, np.ndarray] | None] = [None] * len(items)
+        probe_ex: list[dict | None] = [None] * len(items)
         refs: Counter = Counter()
         new_vertices: list[tuple[int, int]] = []
         n_new = 0
@@ -961,8 +1131,8 @@ class StorageEngine:
                                            dtype=np.float64).ravel()
                                 for pos in chunk
                             ])
-                            group_bases, group_new = self._probe_dim_group(
-                                index, flats, tau_
+                            group_bases, group_new, group_ex = (
+                                self._probe_dim_group(index, flats, tau_)
                             )
                             if group_new:
                                 self.index_cache.mark_dirty(dim)
@@ -973,6 +1143,7 @@ class StorageEngine:
                             for gj, pos in enumerate(chunk):
                                 vid, delta = group_bases[gj]
                                 bases[pos] = (vid, delta)
+                                probe_ex[pos] = group_ex[gj]
                                 refs[(dim, vid)] += 1
                                 # Hold the ref until commit so a concurrent
                                 # delete cannot tombstone this base under
@@ -987,6 +1158,7 @@ class StorageEngine:
             # order. Deltas are released as they are consumed.
             records: list[TensorRecord] = []
             nbits: list[int] = []
+            explain: list[dict] = []
             with trace("quantize", n_tensors=len(items)):
                 for i, (tname, shape, src) in enumerate(items):
                     vid, delta = bases[i]
@@ -1003,6 +1175,19 @@ class StorageEngine:
                     )
                     rec.payload = encode_payload(rec)
                     records.append(rec)
+                    ex = probe_ex[i]
+                    explain.append({
+                        "tensor": tname,
+                        "dim": int(src.size),
+                        "vertex_id": int(ex["vertex_id"]),
+                        "outcome": ex["outcome"],
+                        "probe_distance": ex["probe_distance"],
+                        "delta_range": ex["delta_range"],
+                        "tau": float(tau_),
+                        "nbit": int(meta.nbit),
+                        "delta_bytes": len(rec.payload),
+                        "error_bound": float(p),
+                    })
             with trace("pack"):
                 page = write_page(records, checksums=self.checksums)
 
@@ -1052,6 +1237,8 @@ class StorageEngine:
                     n_tensors=len(records),
                     original_bytes=original_bytes,
                     status=STATUS_PENDING,
+                    explain=(explain[:EXPLAIN_PERSIST_MAX]
+                             if self.accounting else None),
                 )
                 self.catalog.state.models[name] = entry
                 for (dim, vid), c in refs.items():
@@ -1061,11 +1248,22 @@ class StorageEngine:
                         self.catalog.ref(dim, vid, -c)
                 entry.status = STATUS_COMMITTED
                 self.catalog.save_snapshot()  # ← commit point
+                self._account_committed_save(
+                    name, model_id, page_name, len(page), original_bytes,
+                    tuple(
+                        TensorSpace(rec.dim_key, rec.vertex_id, rec.numel,
+                                    len(rec.payload))
+                        for rec in records
+                    ),
+                    explain,
+                )
                 maybe_fail("save.after_snapshot")
                 if old:
                     self._tombstone_unreferenced(old_refs)
                     self.index_cache.flush()
                     self._unlink(self._page_file(old.page))
+                    self._pending_explains.pop(old.model_id, None)
+                    self._unlink(self._explain_file(old.model_id))
                     self.page_pool.invalidate(old.page)
                 self.catalog.commit_tx(tx)
                 self.index_cache.trim()
@@ -1087,6 +1285,7 @@ class StorageEngine:
             n_deltas=len(records) - n_new,
             nbits=nbits,
             seconds=op.elapsed(),
+            explain=explain,
         )
 
     def save_models(
@@ -1151,6 +1350,7 @@ class StorageEngine:
         # Phase 1 (locked): one batched probe + insert per dim for the
         # whole batch — the cross-model half of the ingest amortization.
         bases: list[list] = [[None] * len(items) for items in all_items]
+        probe_ex: list[list] = [[None] * len(items) for items in all_items]
         refs: Counter = Counter()
         new_vertices: list[tuple[int, int]] = []
         n_new_per_model = [0] * len(specs)
@@ -1169,8 +1369,8 @@ class StorageEngine:
                                 ).ravel()
                                 for mi, pos in chunk
                             ])
-                            group_bases, group_new = self._probe_dim_group(
-                                index, flats, tau_
+                            group_bases, group_new, group_ex = (
+                                self._probe_dim_group(index, flats, tau_)
                             )
                             if group_new:
                                 self.index_cache.mark_dirty(dim)
@@ -1181,6 +1381,7 @@ class StorageEngine:
                             for gj, (mi, pos) in enumerate(chunk):
                                 vid, delta = group_bases[gj]
                                 bases[mi][pos] = (vid, delta)
+                                probe_ex[mi][pos] = group_ex[gj]
                                 refs[(dim, vid)] += 1
                                 self._inflight[(dim, vid)] += 1
                                 if vid in group_new_set:
@@ -1193,10 +1394,13 @@ class StorageEngine:
             # Phase 2 (unlocked): encode every model's page.
             pages: list[bytes] = []
             nbits_per_model: list[list[int]] = []
+            explain_per_model: list[list[dict]] = []
+            spaces_per_model: list[tuple] = []
             with trace("quantize", n_models=len(all_items)):
                 for mi, items in enumerate(all_items):
                     records: list[TensorRecord] = []
                     nbits: list[int] = []
+                    explain: list[dict] = []
                     for i, (tname, shape, src) in enumerate(items):
                         vid, delta = bases[mi][i]
                         bases[mi][i] = (vid, None)  # release the delta
@@ -1212,11 +1416,30 @@ class StorageEngine:
                         )
                         rec.payload = encode_payload(rec)
                         records.append(rec)
+                        ex = probe_ex[mi][i]
+                        explain.append({
+                            "tensor": tname,
+                            "dim": int(src.size),
+                            "vertex_id": int(ex["vertex_id"]),
+                            "outcome": ex["outcome"],
+                            "probe_distance": ex["probe_distance"],
+                            "delta_range": ex["delta_range"],
+                            "tau": float(tau_),
+                            "nbit": int(meta.nbit),
+                            "delta_bytes": len(rec.payload),
+                            "error_bound": float(p),
+                        })
                     with trace("pack"):
                         pages.append(
                             write_page(records, checksums=self.checksums)
                         )
                     nbits_per_model.append(nbits)
+                    explain_per_model.append(explain)
+                    spaces_per_model.append(tuple(
+                        TensorSpace(rec.dim_key, rec.vertex_id, rec.numel,
+                                    len(rec.payload))
+                        for rec in records
+                    ))
 
             # Phase 3 (locked): ONE journaled commit for the whole batch.
             with trace("commit"), self._lock:
@@ -1273,6 +1496,10 @@ class StorageEngine:
                         n_tensors=len(all_items[mi]),
                         original_bytes=original_bytes[mi],
                         status=STATUS_COMMITTED,
+                        explain=(
+                            explain_per_model[mi][:EXPLAIN_PERSIST_MAX]
+                            if self.accounting else None
+                        ),
                     )
                 for (dim, vid), c in refs.items():
                     self.catalog.ref(dim, vid, c)
@@ -1280,12 +1507,20 @@ class StorageEngine:
                     for (dim, vid), c in old_refs[mi].items():
                         self.catalog.ref(dim, vid, -c)
                 self.catalog.save_snapshot()  # ← commit point for ALL models
+                for mi in range(len(specs)):
+                    self._account_committed_save(
+                        names[mi], model_ids[mi], page_names[mi],
+                        len(pages[mi]), original_bytes[mi],
+                        spaces_per_model[mi], explain_per_model[mi],
+                    )
                 maybe_fail("save_batch.after_snapshot")
                 dropped_old = False
                 for mi in range(len(specs)):
                     if olds[mi]:
                         self._tombstone_unreferenced(old_refs[mi])
                         self._unlink(self._page_file(olds[mi].page))
+                        self._pending_explains.pop(olds[mi].model_id, None)
+                        self._unlink(self._explain_file(olds[mi].model_id))
                         self.page_pool.invalidate(olds[mi].page)
                         dropped_old = True
                 if dropped_old:
@@ -1312,6 +1547,7 @@ class StorageEngine:
                 n_deltas=len(all_items[mi]) - n_new_per_model[mi],
                 nbits=nbits_per_model[mi],
                 seconds=per_model_s,
+                explain=explain_per_model[mi],
             )
             for mi in range(len(specs))
         ]
@@ -1347,11 +1583,15 @@ class StorageEngine:
             for (dim, vid), c in refs.items():
                 self.catalog.ref(dim, vid, -c)
             self.catalog.save_snapshot()  # ← commit point
+            if self.accounting:
+                self._accountant.record_delete(name)
             maybe_fail("delete.after_snapshot")
             self._tombstone_unreferenced(refs)
             self.index_cache.flush()
             maybe_fail("delete.after_index_flush")
             self._unlink(self._page_file(entry.page))
+            self._pending_explains.pop(entry.model_id, None)
+            self._unlink(self._explain_file(entry.model_id))
             self.page_pool.invalidate(entry.page)
             self._corrupt_reasons.pop(name, None)
             self.catalog.commit_tx(tx)
@@ -1404,6 +1644,7 @@ class StorageEngine:
         """
         self._check_writable()
         self._drain_released()
+        self.flush_explains()
         report: dict = {
             "dims": {},
             "skipped_dims": [],
@@ -1478,6 +1719,12 @@ class StorageEngine:
                     self.index_cache.unpin(dim)
             self.index_cache.flush()
             self.index_cache.trim()
+            if self.accounting and report["dims"]:
+                # Compaction renumbered vertex ids and renamed pages:
+                # the incremental ledger's facts are stale — reseed it
+                # from the post-vacuum store (the same full rescan that
+                # runs at open).
+                self._accountant.reset(self._scan_model_spaces())
         _M_OPS.labels("vacuum").inc()
         _M_OP_SECONDS.labels("vacuum").observe(op.elapsed())
         return report
@@ -1633,6 +1880,10 @@ class StorageEngine:
             entry.status = STATUS_CORRUPT
             self._corrupt_reasons[name] = reason
             self.page_pool.invalidate(page_name)
+            if self.accounting:
+                # A quarantined model is no longer servable (and the
+                # rescan skips it), so it leaves the space ledger too.
+                self._accountant.record_delete(name)
             _M_QUARANTINES.inc()
             if persist and not self.read_only:
                 try:
@@ -2138,11 +2389,13 @@ class StorageEngine:
             return self.maintenance
 
     def close(self) -> None:
-        """Stop background maintenance and release queued snapshot pins."""
+        """Stop background maintenance, flush queued EXPLAIN sidecars,
+        and release queued snapshot pins."""
         daemon = self.maintenance
         if daemon is not None:
             daemon.stop()
             self.maintenance = None
+        self.flush_explains()
         self._drain_released()
 
     # ------------------------------------------------------------ accounting
@@ -2180,6 +2433,7 @@ class StorageEngine:
                     "checksums": self.checksums,
                     "corrupt_models": sorted(self.catalog.corrupt_names()),
                 },
+                "accounting": self._accounting_stats(),
             }
             if self.maintenance is not None:
                 out["maintenance"] = self.maintenance.stats()
@@ -2224,6 +2478,108 @@ class StorageEngine:
             # 8-bit base codes + graph overhead approximated by codes size.
             total += rec.numel / max(share, 1)
         return total
+
+    def _accounting_stats(self) -> dict:
+        """The ``accounting`` section of :meth:`stats` (documented —
+        StoreStats projects ``logical_bytes`` / ``physical_bytes`` /
+        ``compression_ratio`` out of it)."""
+        logical, physical = self._accountant.totals(self.catalog.ref_count)
+        return {
+            "enabled": self.accounting,
+            "logical_bytes": logical,
+            "physical_bytes": physical,
+            "compression_ratio": (
+                physical / logical if logical > 0 else None
+            ),
+        }
+
+    def _scan_model_spaces(self) -> list[ModelSpace]:
+        """Full-rescan ground truth for the space accountant.
+
+        Metadata-only page scans (no payload decode) over every committed
+        model; unreadable or damaged pages are skipped — accounting must
+        never turn an I/O hiccup into an open failure (fsck owns damage
+        reporting). Uses its own fault site (``page.accounting``) so the
+        existing fault-campaign schedules are not perturbed.
+        """
+        spaces: list[ModelSpace] = []
+        for name in self.catalog.names():
+            entry = self.catalog.get(name)
+            path = self._page_file(entry.page)
+            try:
+                buf = self.fs.read_bytes(path, site="page.accounting")
+                page = read_page_header(buf)
+                tensors = tuple(
+                    TensorSpace(rec.dim_key, rec.vertex_id, rec.numel,
+                                rec.payload_nbytes)
+                    for rec in (
+                        read_record(page, i, with_payload=False)
+                        for i in range(page.n_records)
+                    )
+                )
+            except (OSError, CorruptPageError):
+                continue
+            spaces.append(ModelSpace(
+                name=name,
+                page=entry.page,
+                page_bytes=len(buf),
+                logical_bytes=entry.original_bytes,
+                tensors=tensors,
+            ))
+        return spaces
+
+    def accounting_report(self, tenant_of=None) -> dict:
+        """Space-attribution report (see ``repro.obs.accounting``).
+
+        With accounting disabled the report is computed from a one-off
+        rescan instead of the (empty) incremental ledger, so the surface
+        stays queryable either way. ``tenant_of(name)`` optionally maps a
+        model name to its tenant for the per-tenant breakdown.
+        """
+        with self._lock:
+            acct = self._accountant
+            if not self.accounting:
+                acct = SpaceAccountant()
+                acct.reset(self._scan_model_spaces())
+            return acct.report(self.catalog.ref_count, tenant_of=tenant_of)
+
+    def accounting_drift(self) -> list[str]:
+        """Cross-check the incremental ledger against a fresh rescan.
+
+        Returns one human-readable line per discrepancy (empty = clean).
+        This is the fsck ``--accounting`` check: any drift means a commit
+        point failed to keep the ledger in step with the store.
+        """
+        if not self.accounting:
+            return []
+        with self._lock:
+            truth = SpaceAccountant()
+            truth.reset(self._scan_model_spaces())
+            return self._accountant.diff(truth)
+
+    def model_explain(self, name: str) -> dict:
+        """The persisted save-EXPLAIN + current space attribution for one
+        model (the ``GET …/models/{name}/explain`` body)."""
+        with self._lock:
+            entry = self.catalog.get(name)
+            if entry is None:
+                raise KeyError(name)
+            if entry.explain is None:
+                # Not in memory (engine reopened since the save): pull
+                # the persisted sidecar and cache it on the entry.
+                entry.explain = self._load_explain_sidecar(entry.model_id)
+            explain = list(entry.explain) if entry.explain else []
+            out = {
+                "name": name,
+                "model_id": entry.model_id,
+                "n_tensors": entry.n_tensors,
+                "explain": explain,
+                # True when the save had more tensors than the catalog
+                # persists (EXPLAIN_PERSIST_MAX) or predates EXPLAIN.
+                "truncated": len(explain) < entry.n_tensors,
+            }
+        out["accounting"] = self.accounting_report()["per_model"].get(name)
+        return out
 
     def reconstruct_tensor(self, rec: TensorRecord) -> np.ndarray:
         """Full reconstruction: de-quantized base + de-quantized delta."""

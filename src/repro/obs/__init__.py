@@ -14,6 +14,11 @@ recorded).  ``benchmarks/serving_bench.py`` measures both modes and
 ``benchmarks/perf_gate.py`` enforces obs-on >= 0.95x obs-off QPS.
 """
 
+from repro.obs.accounting import (
+    ModelSpace,
+    SpaceAccountant,
+    TensorSpace,
+)
 from repro.obs.metrics import (
     Counter,
     Gauge,
@@ -38,7 +43,10 @@ __all__ = [
     "Gauge",
     "Histogram",
     "MetricsRegistry",
+    "ModelSpace",
     "Span",
+    "SpaceAccountant",
+    "TensorSpace",
     "current_span",
     "default_registry",
     "get_slow_op_threshold",

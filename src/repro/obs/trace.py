@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import contextvars
 import logging
+import os
 import secrets
 import threading
 import time
@@ -58,7 +59,26 @@ _ring: Deque["Span"] = deque(maxlen=256)
 # Seconds; roots slower than this dump their tree to the slow-op log.
 # Default 1.0 s: a full-model save at bench scale sits well under it,
 # so production logs stay quiet unless something is actually slow.
-_slow_threshold_s = 1.0
+# Overridable without code via NEURSTORE_SLOW_OP_THRESHOLD_S (read once
+# at import; invalid values fall back to the default), and at runtime
+# via set_slow_op_threshold() / the ModelStoreServer knob.
+DEFAULT_SLOW_OP_THRESHOLD_S = 1.0
+
+
+def _threshold_from_env() -> float:
+    raw = os.environ.get("NEURSTORE_SLOW_OP_THRESHOLD_S")
+    if raw is None:
+        return DEFAULT_SLOW_OP_THRESHOLD_S
+    try:
+        val = float(raw)
+    except ValueError:
+        return DEFAULT_SLOW_OP_THRESHOLD_S
+    if not (val > 0.0):  # rejects NaN, zero and negatives
+        return DEFAULT_SLOW_OP_THRESHOLD_S
+    return val
+
+
+_slow_threshold_s = _threshold_from_env()
 
 _slow_ops_total = _metrics.default_registry().counter(
     "neurstore_slow_ops_total",

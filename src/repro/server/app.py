@@ -12,8 +12,10 @@ Routes (wire details in ``docs/serving.md``)::
 
     GET    /v1/healthz                              liveness
     GET    /v1/stats                                StoreStats (versioned)
+    GET    /v1/accounting                           space accounting report
     POST   /v1/admin/vacuum                         {"min_dead_fraction"}
     GET    /v1/tenants/{t}/models                   list model names
+    GET    /v1/tenants/{t}/models/{name}/explain    save EXPLAIN + space
     GET    /v1/tenants/{t}/quota                    quota usage report
     POST   /v1/tenants/{t}/models/{name}            save   (streamed body)
     PUT    /v1/tenants/{t}/models/{name}            replace (streamed body)
@@ -41,12 +43,22 @@ from urllib.parse import parse_qs, unquote, urlsplit
 
 from ..core.engine import STATS_SCHEMA_VERSION
 from ..obs.metrics import default_registry
-from ..obs.trace import parse_traceparent, trace
+from ..obs.trace import (
+    get_slow_op_threshold,
+    parse_traceparent,
+    set_slow_op_threshold,
+    trace,
+)
 from ..store.api import SaveRequest, StoreStats
 from ..store.errors import error_payload
 from . import wire
 from .admission import AdmissionPolicy
-from .quota import QuotaManager, tenant_model_name, validate_tenant
+from .quota import (
+    QuotaManager,
+    split_tenant,
+    tenant_model_name,
+    validate_tenant,
+)
 
 __all__ = ["ModelStoreServer"]
 
@@ -366,6 +378,11 @@ class _Handler(BaseHTTPRequestHandler):
                 self._route_label = "metrics"
                 self._get_metrics()
                 return
+            if rest == ["accounting"] and method == "GET":
+                self._route_label = "accounting"
+                self._send_json(200, _jsonable(ctx.engine.accounting_report(
+                    tenant_of=_tenant_of)))
+                return
             if rest == ["admin", "vacuum"] and method == "POST":
                 self._route_label = "admin.vacuum"
                 body = self._read_json_body()
@@ -384,6 +401,16 @@ class _Handler(BaseHTTPRequestHandler):
                     self._route_label = "tenant.quota"
                     self._send_json(
                         200, ctx.quotas.report(ctx.engine, tenant))
+                    return
+                if (len(rest) >= 5 and rest[2] == "models"
+                        and rest[-1] == "explain" and method == "GET"):
+                    # Checked before the generic model routes: model
+                    # names may contain "/", so ".../models/x/explain"
+                    # would otherwise parse as model "x/explain".
+                    self._route_label = "model.explain"
+                    name = "/".join(rest[3:-1])
+                    self._send_json(200, _jsonable(ctx.engine.model_explain(
+                        tenant_model_name(tenant, name))))
                     return
                 if len(rest) >= 4 and rest[2] == "models":
                     name = "/".join(rest[3:])
@@ -442,6 +469,7 @@ class _Handler(BaseHTTPRequestHandler):
             "stats_schema_version": STATS_SCHEMA_VERSION,
             "uptime_s": time.monotonic() - ctx.started_at,
             "read_only": engine.read_only,
+            "slow_op_threshold_s": get_slow_op_threshold(),
             "maintenance": maint,
         })
 
@@ -585,6 +613,13 @@ class _Handler(BaseHTTPRequestHandler):
         self.wfile.write(b"\r\n")
 
 
+def _tenant_of(full_name: str) -> str | None:
+    """Accounting tenant attribution: the validated tenant namespace of
+    a catalog name, or ``None`` for embedded (non-namespaced) models."""
+    parsed = split_tenant(full_name)
+    return parsed[0] if parsed is not None else None
+
+
 def _jsonable(obj):
     """Deep-convert a report dict to JSON-safe types (int dict keys)."""
     if isinstance(obj, dict):
@@ -612,8 +647,14 @@ class ModelStoreServer:
         admission: AdmissionPolicy | None = None,
         response_cache_bytes: int = 256 << 20,
         response_cache_max_entry_bytes: int | None = None,
+        slow_op_threshold_s: float | None = None,
     ):
         self.engine = engine
+        if slow_op_threshold_s is not None:
+            # Process-wide knob (one trace ring, one threshold); the
+            # active value is surfaced in /v1/healthz. None = leave the
+            # env-var / set_slow_op_threshold() configured value alone.
+            set_slow_op_threshold(slow_op_threshold_s)
         self.quotas = quotas if quotas is not None else QuotaManager()
         self.admission = admission if admission is not None else AdmissionPolicy()
         self.started_at = time.monotonic()
@@ -659,6 +700,9 @@ class ModelStoreServer:
         if self._thread is not None:
             self._thread.join(timeout=5)
             self._thread = None
+        # The engine may outlive the server (caller-owned), but queued
+        # EXPLAIN sidecars should not wait for its close().
+        self.engine.flush_explains()
         if self.engine.commit_gate is not None:
             self.engine.commit_gate = None
 

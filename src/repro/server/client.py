@@ -266,5 +266,18 @@ class StoreClient:
     def stats(self) -> StoreStats:
         return StoreStats.from_dict(self._json("GET", "/v1/stats"))
 
+    def accounting(self) -> dict:
+        """Store-wide space accounting report (``GET /v1/accounting``).
+
+        Same shape as the embedded ``NeurStore.accounting()``:
+        ``{"store", "per_model", "per_dim", "per_tenant"}`` — see
+        ``docs/observability.md`` for field semantics.
+        """
+        return self._json("GET", "/v1/accounting")
+
+    def explain(self, name: str) -> dict:
+        """Persisted save EXPLAIN + space attribution for one model."""
+        return self._json("GET", self._model_path(name, "/explain"))
+
     def healthz(self) -> bool:
         return bool(self._json("GET", "/v1/healthz").get("ok"))

@@ -137,6 +137,16 @@ class NeurStore:
         return StoreStats.from_engine(self.engine.stats())
 
     # --------------------------------------------------------- observability
+    def accounting(self) -> dict:
+        """Space accounting: ``{"store", "per_model", "per_dim",
+        "per_tenant"}`` byte attribution (``docs/observability.md``)."""
+        return self.engine.accounting_report()
+
+    def explain(self, name: str) -> dict:
+        """Persisted save EXPLAIN (per-tensor dedup decisions) + the
+        model's current space attribution."""
+        return self.engine.model_explain(name)
+
     def metrics(self) -> dict:
         """Parsed snapshot of the process-wide metrics registry.
 

@@ -61,8 +61,18 @@ class SaveRequest:
     tau: float | None = None
 
     def total_bytes(self) -> int:
-        """Uncompressed float32 footprint (what quota admission sees)."""
-        return sum(int(np.asarray(t).size) * 4 for t in self.tensors.values())
+        """Uncompressed float32 footprint (what quota admission sees).
+
+        The store casts every input to float32 before quantizing, so the
+        footprint is ``size * itemsize(f32)`` regardless of the input
+        dtype — an f16 upload is *not* half price, and an f64 upload is
+        not double. This keeps quota admission and the space accountant
+        (``repro.obs.accounting``) charging the same logical bytes.
+        """
+        itemsize = np.dtype(np.float32).itemsize
+        return sum(
+            int(np.asarray(t).size) * itemsize for t in self.tensors.values()
+        )
 
     def wire_header(self) -> dict:
         """The JSON header frame of a streamed upload (tensors excluded)."""
@@ -190,6 +200,13 @@ class StoreStats:
     pool_pinned_bytes: int
     read_only: bool
     corrupt_models: int
+    # Space accounting (repro.obs.accounting): logical = uncompressed
+    # f32 footprint of all committed models; physical = page bytes plus
+    # shared 8-bit base codes; ratio = physical / logical (None when the
+    # store is empty).
+    logical_bytes: int = 0
+    physical_bytes: int = 0
+    compression_ratio: float | None = None
     raw: dict = dataclasses.field(default_factory=dict, repr=False)
 
     @classmethod
@@ -198,6 +215,7 @@ class StoreStats:
         pool = stats.get("buffer_pool", {})
         snaps = stats.get("snapshots", {})
         integ = stats.get("integrity", {})
+        acct = stats.get("accounting", {})
         return cls(
             schema_version=int(stats.get("schema_version", 0)),
             epoch=int(stats.get("epoch", 0)),
@@ -209,6 +227,9 @@ class StoreStats:
             pool_pinned_bytes=int(pool.get("pinned_bytes", 0)),
             read_only=bool(integ.get("read_only", False)),
             corrupt_models=len(integ.get("corrupt_models", ())),
+            logical_bytes=int(acct.get("logical_bytes", 0)),
+            physical_bytes=int(acct.get("physical_bytes", 0)),
+            compression_ratio=acct.get("compression_ratio"),
             raw=stats,
         )
 

@@ -109,6 +109,10 @@ CONTRACT = [
     ("neurstore_server_response_cache_evictions_total", "counter", ()),
     ("neurstore_server_admission_rejects_total", "counter", ("reason",)),
     ("neurstore_slow_ops_total", "counter", ("op",)),
+    ("neurstore_dedup_outcomes_total", "counter", ("outcome",)),
+    ("neurstore_delta_bits", "histogram", ()),
+    ("neurstore_logical_bytes", "gauge", ()),
+    ("neurstore_physical_bytes", "gauge", ()),
 ]
 
 

@@ -477,10 +477,12 @@ def test_healthz_shape_is_enriched(served):
     with urllib.request.urlopen(url) as resp:
         body = _json.loads(resp.read())
     assert set(body) == {
-        "ok", "stats_schema_version", "uptime_s", "read_only", "maintenance"}
+        "ok", "stats_schema_version", "uptime_s", "read_only", "maintenance",
+        "slow_op_threshold_s"}
     assert set(body["maintenance"]) == {
         "running", "consecutive_errors", "last_error_age_s"}
     assert body["stats_schema_version"] == STATS_SCHEMA_VERSION
+    assert body["slow_op_threshold_s"] > 0
 
 
 def test_metrics_route_serves_prometheus_text(served):

@@ -262,12 +262,36 @@ def _repair(root: str, rep: dict, drop_corrupt: bool) -> None:
         eng.close()
 
 
-def fsck(root: str, repair: bool = False, drop_corrupt: bool = False) -> dict:
+def _check_accounting(root: str, rep: dict, engine=None) -> None:
+    """Cross-check the incremental :class:`SpaceAccountant` against the
+    full-rescan verifier; every drift line is a check *failure*.
+
+    With ``engine`` given (a live ``StorageEngine``), its in-memory
+    ledger — maintained incrementally at every commit point — is diffed
+    against a fresh page rescan. Without one, a temporary engine is
+    opened (whose open-time seed IS the rescan, so this degenerates to
+    verifying the rescan is internally reproducible, e.g. that no page
+    mutates between two reads).
+    """
+    own = engine is None
+    if own:
+        engine = StorageEngine(root)
+    try:
+        rep["errors"].extend(engine.accounting_drift())
+    finally:
+        if own:
+            engine.close()
+
+
+def fsck(root: str, repair: bool = False, drop_corrupt: bool = False,
+         accounting: bool = False) -> dict:
     """Check (and optionally repair) the store at ``root``.
 
     Returns ``{"root", "errors", "warnings", "actions", "clean"}`` —
     ``clean`` means no errors (warnings allowed). With ``repair=True``
     the report reflects a fresh re-check *after* the repair actions.
+    ``accounting=True`` additionally diffs the incremental space
+    accountant against a full page rescan (drift = error).
     """
     rep: dict = {"root": root, "errors": [], "warnings": [], "actions": []}
     _check(root, rep)
@@ -275,6 +299,8 @@ def fsck(root: str, repair: bool = False, drop_corrupt: bool = False) -> dict:
         _repair(root, rep, drop_corrupt)
         rep["errors"], rep["warnings"] = [], []
         _check(root, rep)
+    if accounting:
+        _check_accounting(root, rep)
     rep["clean"] = not rep["errors"]
     return rep
 
@@ -289,10 +315,14 @@ def main(argv=None) -> int:
     ap.add_argument("--drop-corrupt", action="store_true",
                     help="with --repair: delete quarantined models and "
                          "rebuild the reference table")
+    ap.add_argument("--accounting", action="store_true",
+                    help="cross-check the incremental space accountant "
+                         "against a full page rescan (drift = failure)")
     ap.add_argument("--json", action="store_true", dest="as_json",
                     help="emit the report as JSON")
     args = ap.parse_args(argv)
-    rep = fsck(args.root, repair=args.repair, drop_corrupt=args.drop_corrupt)
+    rep = fsck(args.root, repair=args.repair, drop_corrupt=args.drop_corrupt,
+               accounting=args.accounting)
     if args.as_json:
         print(json.dumps(rep, indent=2))
     else:

@@ -18,11 +18,17 @@ and re-renders every N seconds, adding per-interval rates for counters.
 ``--traces`` additionally dumps the recent-trace ring (embedded mode
 only — the ring is per-process).
 
+``--space`` switches to the du-style space-accounting view (logical vs
+physical bytes, base/delta/metadata split, compression ratio — see
+``docs/observability.md``): embedded mode asks the engine's
+``SpaceAccountant``, ``--url`` mode fetches ``GET /v1/accounting``.
+
 Examples::
 
     PYTHONPATH=src python tools/nstat.py --url http://127.0.0.1:8080
     PYTHONPATH=src python tools/nstat.py --url http://127.0.0.1:8080 --watch 2
     PYTHONPATH=src python tools/nstat.py /path/to/store --traces
+    PYTHONPATH=src python tools/nstat.py /path/to/store --space
 """
 
 from __future__ import annotations
@@ -123,6 +129,78 @@ def _render(families: dict, prev: dict | None, interval_s: float) -> str:
     return "\n".join(out)
 
 
+def _fetch_accounting(url: str) -> dict:
+    import json
+    with urllib.request.urlopen(url.rstrip("/") + "/v1/accounting",
+                                timeout=10) as resp:
+        return json.loads(resp.read().decode("utf-8"))
+
+
+def _embedded_accounting(path: str) -> dict:
+    from repro.store import NeurStore
+    with NeurStore.open(path) as store:
+        return store.accounting()
+
+
+def _human(n) -> str:
+    n = float(n)
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if abs(n) < 1024 or unit == "GiB":
+            return f"{n:.1f}{unit}" if unit != "B" else f"{n:.0f}B"
+        n /= 1024
+    return f"{n:.1f}GiB"
+
+
+def _ratio_txt(r) -> str:
+    return f"{r:.3f}" if r is not None else "-"
+
+
+def _render_space(report: dict) -> str:
+    """du-style rendering of the accounting report."""
+    out = []
+    s = report["store"]
+    if not s["models"]:
+        return "[store]  0 models (empty)"
+    out.append(
+        f"[store]  models={s['models']}  logical={_human(s['logical_bytes'])}"
+        f"  physical={_human(s['physical_bytes'])}"
+        f"  ratio={_ratio_txt(s.get('compression_ratio'))}")
+    out.append(
+        f"         pages={_human(s['page_bytes'])}"
+        f" (delta {_human(s['delta_bytes'])}"
+        f" + metadata {_human(s['metadata_bytes'])})"
+        f"  shared base={_human(s['base_bytes'])}")
+    per_model = report.get("per_model", {})
+    if per_model:
+        out.append("[per model]   physical  logical   ratio  reclaim  name")
+        ordered = sorted(per_model.items(),
+                         key=lambda kv: -kv[1]["physical_bytes"])
+        for name, m in ordered:
+            out.append(
+                f"  {_human(m['physical_bytes']):>9}"
+                f"  {_human(m['logical_bytes']):>8}"
+                f"  {_ratio_txt(m.get('compression_ratio')):>6}"
+                f"  {_human(m['reclaimable_bytes']):>7}  {name}")
+    per_dim = report.get("per_dim", {})
+    if per_dim:
+        out.append("[per dim-group]  tensors  bases  base bytes  delta bytes")
+        for dim, d in per_dim.items():
+            out.append(
+                f"  dim {dim:>10}  {d['tensors']:>7}  {d['base_vertices']:>5}"
+                f"  {_human(d['base_bytes']):>10}"
+                f"  {_human(d['delta_bytes']):>11}")
+    per_tenant = report.get("per_tenant", {})
+    if per_tenant:
+        out.append("[per tenant]  models  physical  logical  ratio")
+        for tenant, t in sorted(per_tenant.items()):
+            out.append(
+                f"  {tenant:<12}  {t['models']:>5}"
+                f"  {_human(t['physical_bytes']):>8}"
+                f"  {_human(t['logical_bytes']):>8}"
+                f"  {_ratio_txt(t.get('compression_ratio'))}")
+    return "\n".join(out)
+
+
 def _dump_traces(n: int) -> str:
     from repro.obs.trace import recent_traces
     roots = recent_traces(n)
@@ -141,9 +219,18 @@ def main(argv: list[str] | None = None) -> int:
                     help="also dump the last N recent traces (embedded only)")
     ap.add_argument("--raw", action="store_true",
                     help="print the Prometheus text verbatim and exit")
+    ap.add_argument("--space", action="store_true",
+                    help="du-style space accounting view (logical vs "
+                         "physical bytes, per model/dim/tenant)")
     args = ap.parse_args(argv)
     if bool(args.path) == bool(args.url):
         ap.error("give exactly one of PATH (embedded) or --url (scrape)")
+
+    if args.space:
+        report = (_fetch_accounting(args.url) if args.url
+                  else _embedded_accounting(args.path))
+        print(_render_space(report))
+        return 0
 
     def snapshot() -> str:
         return _fetch_text(args.url) if args.url else _embedded_text(args.path)
